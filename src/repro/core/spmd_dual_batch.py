@@ -1,0 +1,164 @@
+"""TPU-native SPMD dual-batch training step (DESIGN.md §3/§4).
+
+The paper's load balance (Eq. 4–8) already equalizes group epoch times, so
+on TPU we realize dual-batch as a *synchronous* SPMD step: the global padded
+batch carries per-example weights
+
+    w_ij = factor(group_i) * valid_ij
+
+(large group: factor 1, all valid; small group: model-update factor, first
+B_S-of-B_L rows valid), and the global update is the weighted mean of
+per-example gradients — exactly the paper's contribution-scaled merge,
+realized as one all-reduce instead of PS push/pull.
+
+An optional *micro-update* mode recovers the higher small-batch update
+frequency of ASP: the small group takes ``micro_steps`` sequential local SGD
+steps inside one global step (lax.scan) before the factor-weighted merge.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import models
+from repro.core.dual_batch import DualBatchPlan
+from repro.optim import Optimizer
+
+
+@dataclass(frozen=True)
+class SpmdDualBatch:
+    """Static layout of the dual-batch global batch.
+
+    The global (padded) batch has ``global_batch`` examples split into
+    n_workers equal worker-rows of ``per_worker`` examples; the last
+    ``n_small`` workers are the small-batch group, of whose rows only the
+    first ``small_valid`` are live.
+    """
+    global_batch: int
+    n_workers: int
+    n_small: int
+    small_valid: int          # valid rows per small worker (from B_S/B_L)
+    factor_small: float
+
+    @property
+    def per_worker(self) -> int:
+        return self.global_batch // self.n_workers
+
+    def weights(self) -> jnp.ndarray:
+        """(global_batch,) per-example weights (0 = padding)."""
+        pw = self.per_worker
+        w = []
+        for i in range(self.n_workers):
+            small = i >= self.n_workers - self.n_small
+            if small:
+                w.append(jnp.where(jnp.arange(pw) < self.small_valid,
+                                   self.factor_small, 0.0))
+            else:
+                w.append(jnp.ones((pw,), jnp.float32))
+        return jnp.concatenate(w)
+
+    @property
+    def effective_examples(self) -> float:
+        pw = self.per_worker
+        return (self.n_workers - self.n_small) * pw \
+            + self.n_small * self.small_valid
+
+
+def layout_from_plan(plan: DualBatchPlan, global_batch: int) -> SpmdDualBatch:
+    """Map a paper DualBatchPlan onto the SPMD global batch.
+
+    Each worker-row is padded to B_L-equivalent width; the small group's
+    valid fraction is B_S / B_L.
+    """
+    pw = global_batch // plan.n_workers
+    frac = plan.B_S / plan.B_L if plan.n_small else 0.0
+    small_valid = max(1, int(round(pw * frac))) if plan.n_small else 0
+    return SpmdDualBatch(global_batch=global_batch,
+                         n_workers=plan.n_workers, n_small=plan.n_small,
+                         small_valid=small_valid,
+                         factor_small=plan.update_factor_small)
+
+
+def make_train_step(cfg, optimizer: Optimizer, *,
+                    layout: Optional[SpmdDualBatch] = None,
+                    drop_rate: float = 0.0):
+    """Build the jit-able train step.
+
+    step(params, opt_state, batch, lr, rng) -> (params, opt_state, metrics)
+    batch: {"tokens","labels"[,...]} — weights are attached from `layout`
+    (or taken from batch["weight"] when given explicitly).
+    """
+    def step(params, opt_state, batch, lr, rng):
+        if layout is not None and "weight" not in batch:
+            w = layout.weights().astype(jnp.float32)
+            batch = dict(batch, weight=w)
+
+        def lf(p):
+            return models.loss_fn(p, cfg, batch, drop_rng=rng,
+                                  drop_rate=drop_rate)
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        params, opt_state = optimizer.update(grads, opt_state, params, lr)
+        return params, opt_state, {"loss": loss}
+
+    return step
+
+
+def make_micro_train_step(cfg, optimizer: Optimizer, *,
+                          layout: SpmdDualBatch, micro_steps: int = 2,
+                          drop_rate: float = 0.0):
+    """Micro-update mode (beyond-weighted variant, DESIGN.md §3.2):
+
+    The small group's rows are split into ``micro_steps`` sequential
+    micro-batches; a lax.scan applies local SGD steps over them starting
+    from the pulled params, and the resulting delta merges into the global
+    update with the model-update factor — recovering ASP's higher
+    small-batch update frequency synchronously.
+    """
+    pw = layout.per_worker
+    n_small_rows = layout.n_small * pw
+
+    def step(params, opt_state, batch, lr, rng):
+        tokens, labels = batch["tokens"], batch["labels"]
+        nl_rows = layout.global_batch - n_small_rows
+        big = {"tokens": tokens[:nl_rows], "labels": labels[:nl_rows]}
+        small = {"tokens": tokens[nl_rows:], "labels": labels[nl_rows:]}
+
+        # large-group gradient (one big batch)
+        def lf_big(p):
+            return models.loss_fn(p, cfg, big, drop_rng=rng,
+                                  drop_rate=drop_rate)
+        (loss_b, _), g_big = jax.value_and_grad(lf_big, has_aux=True)(params)
+
+        # small-group local SGD over micro-batches
+        msz = n_small_rows // micro_steps
+        mt = small["tokens"][: msz * micro_steps].reshape(
+            micro_steps, msz, *tokens.shape[1:])
+        ml = small["labels"][: msz * micro_steps].reshape(
+            micro_steps, msz, *labels.shape[1:])
+
+        def micro(p, xs):
+            t, l = xs
+            def lf(p_):
+                return models.loss_fn(p_, cfg, {"tokens": t, "labels": l},
+                                      drop_rng=rng, drop_rate=drop_rate)
+            (ls, _), g = jax.value_and_grad(lf, has_aux=True)(p)
+            p = jax.tree_util.tree_map(lambda w, gg: w - (lr * gg).astype(w.dtype), p, g)
+            return p, ls
+        p_small, losses = jax.lax.scan(micro, params, (mt, ml))
+
+        # merge: factor-scaled small-group delta + large-group SGD step
+        f = layout.factor_small
+        delta_small = jax.tree_util.tree_map(lambda a, b: a - b, p_small,
+                                             params)
+        params2, opt_state = optimizer.update(g_big, opt_state, params, lr)
+        params2 = jax.tree_util.tree_map(
+            lambda p, d: p + (f * d.astype(jnp.float32)).astype(p.dtype),
+            params2, delta_small)
+        return params2, opt_state, {"loss": loss_b,
+                                    "loss_small": jnp.mean(losses)}
+
+    return step

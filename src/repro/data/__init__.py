@@ -1,0 +1,6 @@
+from repro.data.pipeline import (allocate_worker_indices, epoch_global_batches,
+                                 worker_batches)
+from repro.data.synthetic import SyntheticImages, SyntheticTokens
+
+__all__ = ["SyntheticImages", "SyntheticTokens", "allocate_worker_indices",
+           "worker_batches", "epoch_global_batches"]

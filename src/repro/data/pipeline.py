@@ -1,0 +1,47 @@
+"""Data pipeline: per-worker allocation (dual-batch), epoch iterators with
+resolution resizing (cyclic progressive), deterministic shuffling."""
+from __future__ import annotations
+
+from typing import Iterator, List, Sequence
+
+import numpy as np
+
+from repro.core.dual_batch import DualBatchPlan
+
+
+def allocate_worker_indices(plan: DualBatchPlan, n_data: int,
+                            epoch: int, seed: int = 0) -> List[np.ndarray]:
+    """Split a shuffled epoch permutation into per-worker allocations d_i
+    (paper §3.3: d_L per large worker, d_S per small worker).  Rounds to
+    integers while preserving the total."""
+    rng = np.random.RandomState(seed * 100003 + epoch)
+    perm = rng.permutation(n_data)
+    sizes = [int(round(plan.d_L))] * plan.n_large \
+        + [int(round(plan.d_S))] * plan.n_small
+    # fix rounding drift against the real total
+    drift = n_data - sum(sizes)
+    i = 0
+    while drift != 0 and sizes:
+        sizes[i % len(sizes)] += 1 if drift > 0 else -1
+        drift += -1 if drift > 0 else 1
+        i += 1
+    out, ofs = [], 0
+    for s in sizes:
+        out.append(perm[ofs:ofs + s])
+        ofs += s
+    return out
+
+
+def worker_batches(indices: np.ndarray, batch_size: int) -> Iterator[np.ndarray]:
+    """Yield ceil(d_i / B_i) batches (last one short), per paper Eq. 2."""
+    for ofs in range(0, len(indices), batch_size):
+        yield indices[ofs:ofs + batch_size]
+
+
+def epoch_global_batches(n_data: int, global_batch: int, epoch: int,
+                         seed: int = 0) -> Iterator[np.ndarray]:
+    """SPMD path: shuffled global batches (drop-last)."""
+    rng = np.random.RandomState(seed * 100003 + epoch)
+    perm = rng.permutation(n_data)
+    for ofs in range(0, n_data - global_batch + 1, global_batch):
+        yield perm[ofs:ofs + global_batch]

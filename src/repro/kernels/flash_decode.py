@@ -1,0 +1,106 @@
+"""Pallas TPU flash-DECODE kernel: single-token attention over a long KV
+cache (the decode_32k / long_500k hot spot).
+
+Unlike the prefill kernel (q tiles x kv tiles), decode has one query row per
+(batch, head) and a huge KV axis, so the kernel streams KV blocks with an
+online-softmax accumulator in VMEM scratch — the flash-decoding pattern
+restricted to one grid pass (the cross-device seq split is handled by the
+sharding layer; each shard runs this kernel over its local cache slice and
+XLA merges partials via the m/l outputs... here we emit the final merged
+output per device since the q row is replicated per shard group).
+
+Masking: positions > pos are invalid (cache tail), and an optional static
+sliding window restricts to the last `window` positions.
+
+Block shapes: (block_k, hd) KV tiles, hd lane-aligned (pad head_dim to a
+multiple of 128 at the wrapper level for odd dims).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            block_k: int, nk: int, window: int, scale: float):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[0]
+    k_start = ki * block_k
+
+    def compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # (1, hd)
+        k = k_ref[0, 0].astype(jnp.float32)               # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (1, bk)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+        valid = kpos <= pos
+        if window > 0:
+            valid = jnp.logical_and(valid, kpos > pos - window)
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        m_ref[...] = m_cur
+        acc_ref[...] = acc_ref[...] * alpha \
+            + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+
+    # skip blocks entirely beyond the needed range: start > pos
+    pl.when(k_start <= pos)(compute)
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_decode(q, k_cache, v_cache, pos, *, window: int = 0,
+                 block_k: int = 512, interpret: bool = False):
+    """q: (B, H, 1, hd); k_cache/v_cache: (B, KV, S, hd); pos: scalar int32
+    index of the newest token.  Returns (B, H, 1, hd)."""
+    b, h, _, hd = q.shape
+    kvh, s = k_cache.shape[1], k_cache.shape[2]
+    n_rep = h // kvh
+    block_k = min(block_k, s)
+    assert s % block_k == 0, "pad cache length to block_k"
+    nk = s // block_k
+    scale = hd ** -0.5
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1)
+
+    grid = (b, h, nk)
+    return pl.pallas_call(
+        functools.partial(_kernel, block_k=block_k, nk=nk, window=window,
+                          scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, 1, hd), lambda bi, hi, ki: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda bi, hi, ki: (bi, hi // n_rep, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda bi, hi, ki: (bi, hi // n_rep, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, hd),
+                               lambda bi, hi, ki: (bi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, 1, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos_arr, q, k_cache, v_cache)

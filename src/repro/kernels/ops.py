@@ -1,0 +1,83 @@
+"""Jit'd public wrappers for the Pallas kernels with backend dispatch.
+
+backend="auto": Pallas on TPU, pure-jnp reference otherwise (this container
+is CPU, so models/benches run the refs; kernels are validated against the
+refs in interpret mode by tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.dbl_merge import dbl_merge_flat, dbl_merge_tree
+from repro.kernels.flash_attention import flash_attention as _fa_pallas
+from repro.kernels.flash_decode import flash_decode as _fd_pallas
+from repro.kernels.mamba_scan import mamba_ssd_scan as _ssd_pallas
+from repro.kernels.wkv6 import wkv6_chunked as _wkv_pallas
+
+
+def _use_pallas(backend: str) -> bool:
+    if backend == "pallas":
+        return True
+    if backend == "ref":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "backend",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    backend: str = "auto", interpret: bool = False):
+    """q: (B,H,Sq,hd); k,v: (B,KV,Sk,hd) -> (B,H,Sq,hd)."""
+    if _use_pallas(backend):
+        return _fa_pallas(q, k, v, causal=causal, window=window,
+                          interpret=interpret)
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "backend",
+                                             "interpret"))
+def flash_decode(q, k_cache, v_cache, pos, *, window: int = 0,
+                 backend: str = "auto", interpret: bool = False):
+    """Single-token decode attention. q: (B,H,1,hd); caches (B,KV,S,hd)."""
+    if _use_pallas(backend):
+        return _fd_pallas(q, k_cache, v_cache, pos, window=window,
+                          interpret=interpret)
+    return ref.flash_decode_ref(q, k_cache, v_cache, pos, window=window)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "backend", "interpret"))
+def mamba_ssd(x, dt, A_log, B, C, D_skip, *, chunk: int = 128,
+              backend: str = "auto", interpret: bool = False):
+    """x: (Bt,H,S,P); dt: (Bt,H,S); B,C: (Bt,S,N) -> y (Bt,H,S,P)."""
+    if _use_pallas(backend):
+        return _ssd_pallas(x, dt, A_log, B, C, D_skip, chunk=chunk,
+                           interpret=interpret)
+    y, _ = ref.ssd_scan_ref(x, dt, A_log, B, C, D_skip)
+    return y
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "backend", "interpret"))
+def wkv6(r, k, v, w, u, *, chunk: int = 128, backend: str = "auto",
+         interpret: bool = False):
+    """r,k,w: (B,H,S,K); v: (B,H,S,V); u: (H,K) -> y (B,H,S,V)."""
+    if _use_pallas(backend):
+        return _wkv_pallas(r, k, v, w, u, chunk=chunk, interpret=interpret)
+    y, _ = ref.wkv6_ref(r, k, v, w, u)
+    return y
+
+
+@functools.partial(jax.jit, static_argnames=("factor", "lr", "backend",
+                                             "interpret"))
+def dbl_merge(params, g_large, g_small, *, factor: float, lr: float,
+              backend: str = "auto", interpret: bool = False):
+    """Fused dual-batch server update over parameter pytrees."""
+    if _use_pallas(backend) or interpret:
+        return dbl_merge_tree(params, g_large, g_small, factor=factor,
+                              lr=lr, interpret=interpret)
+    return jax.tree_util.tree_map(
+        lambda p, gl, gs: ref.dbl_merge_ref(p, gl, gs, factor=factor, lr=lr),
+        params, g_large, g_small)

@@ -1,0 +1,103 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (B,H,Sq,hd); k,v: (B,KV,Sk,hd) -> (B,H,Sq,hd). Naive softmax."""
+    b, h, sq, hd = q.shape
+    kvh, sk = k.shape[1], k.shape[2]
+    n_rep = h // kvh
+    k = jnp.repeat(k, n_rep, axis=1)
+    v = jnp.repeat(v, n_rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    if causal:
+        qp = jnp.arange(sq)[:, None]
+        kp = jnp.arange(sk)[None, :]
+        mask = qp >= kp
+        if window > 0:
+            mask = jnp.logical_and(mask, qp - kp < window)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A_log, B, C, D_skip):
+    """Naive per-step SSD recurrence (oracle for the chunked forms).
+
+    x: (Bt,S,H,P); dt: (Bt,S,H); A_log: (H,); B,C: (Bt,S,N); D_skip: (H,).
+    """
+    bt, s, h, p = x.shape
+    n = B.shape[-1]
+    a = -jnp.exp(A_log.astype(jnp.float32))
+
+    def step(hstate, xs):
+        xt, dtt, Bt_, Ct_ = xs
+        alpha = jnp.exp(dtt * a)                          # (Bt,H)
+        upd = jnp.einsum("bhp,bn->bhpn", xt * dtt[..., None], Bt_)
+        hstate = hstate * alpha[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", hstate, Ct_)
+        return hstate, y
+
+    xf = x.astype(jnp.float32).transpose(1, 0, 2, 3)
+    dtf = dt.astype(jnp.float32).transpose(1, 0, 2)
+    Bf = B.astype(jnp.float32).transpose(1, 0, 2)
+    Cf = C.astype(jnp.float32).transpose(1, 0, 2)
+    h0 = jnp.zeros((bt, h, p, n), jnp.float32)
+    hfin, ys = jax.lax.scan(step, h0, (xf, dtf, Bf, Cf))
+    y = ys.transpose(1, 0, 2, 3)
+    y = y + x.astype(jnp.float32) * D_skip.astype(jnp.float32)[None, None, :,
+                                                               None]
+    return y.astype(x.dtype), hfin
+
+
+def wkv6_ref(r, k, v, w, u):
+    """Naive WKV6 recurrence. r,k,w: (B,S,H,K); v: (B,S,H,V); u: (H,K)."""
+    b, s, h, kd = r.shape
+    vd = v.shape[-1]
+    S0 = jnp.zeros((b, h, kd, vd), jnp.float32)
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt,
+                       S + u.astype(jnp.float32)[None, :, :, None] * kv)
+        S = S * wt[..., None] + kv
+        return S, y
+
+    tr = lambda t: t.astype(jnp.float32).transpose(1, 0, 2, 3)
+    Sf, ys = jax.lax.scan(step, S0, (tr(r), tr(k), tr(v), tr(w)))
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype), Sf
+
+
+def flash_decode_ref(q, k_cache, v_cache, pos, *, window=0):
+    """q: (B,H,1,hd); caches (B,KV,S,hd); pos scalar -> (B,H,1,hd)."""
+    b, h, _, hd = q.shape
+    kvh, s = k_cache.shape[1], k_cache.shape[2]
+    k = jnp.repeat(k_cache, h // kvh, axis=1)
+    v = jnp.repeat(v_cache, h // kvh, axis=1)
+    sc = jnp.einsum("bhqd,bhsd->bhqs", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) * hd ** -0.5
+    idx = jnp.arange(s)
+    valid = idx <= pos
+    if window > 0:
+        valid = jnp.logical_and(valid, idx > pos - window)
+    sc = jnp.where(valid[None, None, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, -1)
+    return jnp.einsum("bhqs,bhsd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def dbl_merge_ref(p, g_large, g_small, *, factor, lr):
+    """Paper §3.4 server update, fused form oracle:
+    w' = w − lr·(g_L + f·g_S)/(1 + f)."""
+    gl = g_large.astype(jnp.float32)
+    gs = g_small.astype(jnp.float32)
+    step = (gl + factor * gs) / (1.0 + factor)
+    return (p.astype(jnp.float32) - lr * step).astype(p.dtype)

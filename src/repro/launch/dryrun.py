@@ -1,0 +1,290 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) combination
+on the production meshes, print memory/cost analysis, and dump the roofline
+terms (DESIGN.md §6/§9; EXPERIMENTS.md §Dry-run reads the artifacts).
+
+The XLA_FLAGS override above MUST precede any other import — jax locks the
+device count on first init.  Do not set it anywhere else (tests/benches see
+the real single CPU device).
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma3-4b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out artifacts/dryrun]
+"""
+import argparse
+import functools
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import models
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.launch.hlo_analysis import analyze_hlo, roofline_terms
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import batch_specs, cache_specs, param_specs
+from repro.launch.specs import abstract_params, input_specs
+from repro.launch.steps import (make_decode_step, make_prefill_step,
+                                make_train_step, with_window_override)
+from repro.optim import sgd_momentum
+
+
+def _sh(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def model_flops_for(cfg, shape) -> float:
+    """Global 6·N_active·D (train) / 2·N_active·D (inference) model FLOPs."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def analytic_device_bytes(cfg, shape, n_chips: int) -> dict:
+    """v5e HBM estimate per chip (params/opt/grads sharded; cache sharded)."""
+    pbytes = 2 if cfg.param_dtype == "bfloat16" else 4
+    n = cfg.param_count()
+    params = n * pbytes / n_chips
+    out = {"params_gb": params / 1e9}
+    if shape.kind == "train":
+        out["opt_state_gb"] = n * 4 / n_chips / 1e9      # f32 momentum
+        out["grads_gb"] = params / 1e9
+        tokens_local = shape.global_batch * shape.seq_len / n_chips * 16
+        # checkpointed activations: one (tokens_local, d_model) bf16 per layer
+        out["act_ckpt_gb"] = (cfg.n_layers + cfg.encoder_layers) \
+            * tokens_local * cfg.d_model * 2 / 16 / 1e9
+    if shape.kind == "decode":
+        kv_layers = sum(1 for k in cfg.blocks if "attn" in k) \
+            + (cfg.n_layers if cfg.encoder_layers else 0)
+        cache = (kv_layers * shape.global_batch * shape.seq_len
+                 * cfg.n_kv_heads * cfg.head_dim * 2 * 2)
+        out["kv_cache_gb"] = cache / n_chips / 1e9
+    return out
+
+
+def build_jitted(cfg, shape, mesh):
+    """Return (jitted_fn, example_args) for the shape's step kind."""
+    specs = input_specs(cfg, shape)
+    aparams = abstract_params(cfg)
+    pspecs = param_specs(aparams, mesh)
+
+    if shape.kind == "train":
+        opt = sgd_momentum(0.9)
+        aopt = jax.eval_shape(opt.init, aparams)
+        ospecs = {"v": pspecs}
+        step = make_train_step(cfg, opt)
+        bspecs = batch_specs(specs["batch"], mesh)
+        jitted = jax.jit(
+            step,
+            in_shardings=(_sh(mesh, pspecs), _sh(mesh, ospecs),
+                          _sh(mesh, bspecs), None),
+            out_shardings=(_sh(mesh, pspecs), _sh(mesh, ospecs), None),
+            donate_argnums=(0, 1))
+        args = (aparams, aopt, specs["batch"], 0.01)
+    elif shape.kind == "prefill":
+        step = make_prefill_step(cfg)
+        tok_spec = batch_specs({"t": specs["tokens"]}, mesh)["t"]
+        in_sh = [_sh(mesh, pspecs), NamedSharding(mesh, tok_spec)]
+        args = [aparams, specs["tokens"]]
+        if cfg.encoder_layers:
+            fr_spec = batch_specs({"f": specs["frames"]}, mesh)["f"]
+            in_sh.append(NamedSharding(mesh, fr_spec))
+            args.append(specs["frames"])
+        jitted = jax.jit(step, in_shardings=tuple(in_sh),
+                         out_shardings=NamedSharding(mesh, tok_spec))
+        args = tuple(args)
+    else:  # decode
+        cfg2 = with_window_override(cfg, shape)
+        step = make_decode_step(cfg, shape)
+        cache = jax.eval_shape(
+            functools.partial(models.init_cache, cfg2, shape.global_batch,
+                              shape.seq_len))
+        cspecs = cache_specs(cache, mesh, batch=shape.global_batch)
+        tok_spec = batch_specs({"t": specs["tokens"]}, mesh)["t"]
+        jitted = jax.jit(
+            step,
+            in_shardings=(_sh(mesh, pspecs), _sh(mesh, cspecs),
+                          NamedSharding(mesh, tok_spec), None),
+            out_shardings=(NamedSharding(mesh, tok_spec),
+                           _sh(mesh, cspecs)),
+            donate_argnums=(1,))
+        args = (aparams, cache, specs["tokens"],
+                jax.ShapeDtypeStruct((), jnp.int32))
+    return jitted, args
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str,
+            verbose: bool = True, opt_sharding: bool = False,
+            remat: str = "", pad_experts: int = 0,
+            moe_group: int = 0, moe_cf: float = 0.0,
+            pad_heads: int = 0) -> dict:
+    import contextlib
+    from dataclasses import replace as _replace
+
+    from repro.launch.mesh import data_axes
+    from repro.models.shard_ctx import activation_sharding
+
+    cfg = get_config(arch)
+    if remat:
+        cfg = _replace(cfg, remat=remat)
+    if pad_experts and cfg.moe is not None:
+        cfg = _replace(cfg, moe=_replace(cfg.moe, pad_to=pad_experts))
+    if moe_group and cfg.moe is not None:
+        cfg = _replace(cfg, moe=_replace(cfg.moe, dispatch_group=moe_group))
+    if moe_cf and cfg.moe is not None:
+        cfg = _replace(cfg, moe=_replace(cfg.moe, capacity_factor=moe_cf))
+    if pad_heads:
+        # structural variant for the sharding study: padded q-heads carry
+        # zeroed wo rows in production (semantics-preserving; DESIGN.md)
+        cfg = _replace(cfg, n_heads=pad_heads)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "n_chips": n_chips, "status": "ok",
+           "opt_sharding": opt_sharding}
+    act_ctx = (activation_sharding(mesh, data_axes=data_axes(mesh))
+               if opt_sharding else contextlib.nullcontext())
+    try:
+        with mesh, act_ctx:
+            jitted, args = build_jitted(cfg, shape, mesh)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        cost = analyze_hlo(compiled.as_text())
+        mf = model_flops_for(cfg, shape)
+        roof = roofline_terms(
+            per_device_flops=cost.flops,
+            per_device_bytes=cost.dot_bytes,
+            per_device_collective_bytes=cost.collective_bytes,
+            n_chips=n_chips, model_flops=mf)
+        roof_flash = roofline_terms(
+            per_device_flops=cost.flops,
+            per_device_bytes=cost.dot_bytes_flash,
+            per_device_collective_bytes=cost.collective_bytes,
+            n_chips=n_chips, model_flops=mf)
+        rec.update({
+            "t_lower_s": round(t_lower, 1),
+            "t_compile_s": round(t_compile, 1),
+            "hlo_flops_per_device": cost.flops,
+            "hlo_dot_bytes_per_device": cost.dot_bytes,
+            "hlo_dot_bytes_flash_per_device": cost.dot_bytes_flash,
+            "memory_s_flash": roof_flash.memory_s,
+            "dominant_flash": roof_flash.dominant,
+            "collective_bytes_per_device": cost.collective_bytes,
+            "collective_by_kind": cost.collective_by_kind,
+            "collective_counts": cost.collective_counts,
+            "raw_cost_analysis_flops": ca.get("flops"),
+            "raw_cost_analysis_bytes": ca.get("bytes accessed"),
+            "memory_analysis": {
+                "argument_gb": ma.argument_size_in_bytes / 1e9,
+                "output_gb": ma.output_size_in_bytes / 1e9,
+                "temp_gb": ma.temp_size_in_bytes / 1e9,
+                "alias_gb": ma.alias_size_in_bytes / 1e9,
+            } if ma else None,
+            "analytic_device_memory": analytic_device_bytes(cfg, shape,
+                                                            n_chips),
+            "model_flops": mf,
+            "roofline": {
+                "compute_s": roof.compute_s,
+                "memory_s": roof.memory_s,
+                "collective_s": roof.collective_s,
+                "dominant": roof.dominant,
+                "useful_flops_ratio": roof.useful_flops_ratio,
+                "step_time_s": roof.step_time_s,
+            },
+            "long_500k_variant": (
+                "window" if shape_name == "long_500k"
+                and cfg.long_context_mode == "window" else "native"),
+        })
+        if verbose:
+            print(f"[OK] {arch} x {shape_name} x {mesh_name}: "
+                  f"compile {t_compile:.0f}s  "
+                  f"flops/dev {cost.flops:.2e}  "
+                  f"coll/dev {cost.collective_bytes:.2e}B  "
+                  f"dominant={roof.dominant}")
+            if ma:
+                print(f"     memory_analysis: args {ma.argument_size_in_bytes/1e9:.2f} GB  "
+                      f"temp {ma.temp_size_in_bytes/1e9:.2f} GB (CPU-backend accounting)")
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[FAIL] {arch} x {shape_name} x {mesh_name}: {e}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fname = os.path.join(out_dir,
+                             f"{arch}__{shape_name}__{mesh_name}.json")
+        with open(fname, "w") as f:
+            json.dump(rec, f, indent=1, default=float)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS), default=None)
+    ap.add_argument("--shape", choices=list(SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--opt-sharding", action="store_true",
+                    help="enable activation sharding constraints (§Perf)")
+    ap.add_argument("--remat", default="", choices=("", "none", "block",
+                                                    "dots"),
+                    help="override the config's remat policy (§Perf)")
+    ap.add_argument("--pad-experts", type=int, default=0,
+                    help="pad MoE expert count for expert-parallel (§Perf)")
+    ap.add_argument("--moe-group", type=int, default=0,
+                    help="override MoE dispatch group size (§Perf)")
+    ap.add_argument("--moe-cf", type=float, default=0.0,
+                    help="override MoE capacity factor (§Perf)")
+    ap.add_argument("--pad-heads", type=int, default=0,
+                    help="pad attention heads to divide the TP axis (§Perf)")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args(argv)
+
+    archs = list(ARCH_IDS) if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_one(arch, shape, multi_pod=mp, out_dir=args.out,
+                              opt_sharding=args.opt_sharding,
+                              remat=args.remat,
+                              pad_experts=args.pad_experts,
+                              moe_group=args.moe_group,
+                              moe_cf=args.moe_cf,
+                              pad_heads=args.pad_heads)
+                n_fail += rec["status"] != "ok"
+    if n_fail:
+        print(f"{n_fail} combinations FAILED", file=sys.stderr)
+        sys.exit(1)
+    print("all dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Production meshes (TPU v5e target).
+
+Defined as functions, not module constants, so importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS before first init).
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants (per chip) — used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod ("data","model"); 2 pods stack a leading
+    "pod" axis (data-parallel across DCN/ICI-superpod)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n: int | None = None, axes=("data", "model")):
+    """Small CPU mesh for SPMD tests (requires host-device override)."""
+    dev = len(jax.devices()) if n is None else n
+    model = 1
+    for m in (4, 2, 1):
+        if dev % m == 0:
+            model = m
+            break
+    return jax.make_mesh((dev // model, model), axes)
+
+
+def data_axes(mesh) -> tuple:
+    """Axes that shard the batch dimension."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)

@@ -1,0 +1,188 @@
+"""Divisibility-aware sharding rules (DESIGN.md §9).
+
+Parameters shard 2-D: column-parallel projections P(fsdp, tp), row-parallel
+P(tp, fsdp) — FSDP on "data", tensor-parallel on "model", replicated over
+"pod".  Stacked layer dims (leading scan axis) stay unsharded.  Any dim not
+divisible by its mesh axis falls back to None (e.g. gemma3's 8 heads on a
+16-wide model axis -> attention projections shard on head_dim via the fused
+H*hd column instead).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+FSDP_AXIS = "data"
+TP_AXIS = "model"
+
+# classification by trailing param-path name
+_COL_PARALLEL = {"wq", "wk", "wv", "wi", "wg", "w_in", "w_r", "w_k", "w_v",
+                 "w_g", "cw_k", "cw_r", "res_wi", "res_wg", "w_lora_a"}
+_ROW_PARALLEL = {"wo", "w_out", "cw_v", "res_wo", "w_lora_b"}
+_VOCAB_MAJOR = {"embed", "lm_head"}
+_REPLICATED = {"router"}       # (D, E): small; replicate for exact routing
+
+
+def _axis_size(mesh, name):
+    return mesh.shape[name]
+
+
+def _fit(dim: int, mesh, axis: str):
+    """Return axis if it divides dim, else None."""
+    return axis if dim % _axis_size(mesh, axis) == 0 else None
+
+
+def spec_for(path_names, shape, mesh) -> P:
+    """PartitionSpec for one param leaf. path_names: tuple of str keys."""
+    name = path_names[-1] if path_names else ""
+    nd = len(shape)
+    stacked = 0
+    # stacked per-layer params from vmapped init: detect via path containing
+    # "segments"/"enc"/"dec" — their leading dim is the layer (scan) axis,
+    # which must stay unsharded.
+    if any(p in ("segments", "enc", "dec") for p in path_names) \
+            and nd >= 2:
+        stacked = 1
+    core = shape[stacked:]
+    lead = (None,) * stacked
+
+    if len(core) <= 1 or name in _REPLICATED:
+        return P(*lead, *([None] * len(core)))
+
+    if name in _VOCAB_MAJOR:
+        return P(_fit(core[0], mesh, TP_AXIS), _fit(core[1], mesh, FSDP_AXIS))
+
+    if name in ("wi", "wg", "wo") and len(core) == 3:
+        # MoE expert weights (E, D, F)/(E, F, D): expert-parallel on model
+        e = _fit(core[0], mesh, TP_AXIS)
+        if e is not None:
+            return P(*lead, e, _fit(core[1], mesh, FSDP_AXIS), None)
+        # experts don't divide (granite 40e): shard the ff dim instead
+        if name in ("wi", "wg"):
+            return P(*lead, None, _fit(core[1], mesh, FSDP_AXIS),
+                     _fit(core[2], mesh, TP_AXIS))
+        return P(*lead, None, _fit(core[1], mesh, TP_AXIS),
+                 _fit(core[2], mesh, FSDP_AXIS))
+
+    if name in _COL_PARALLEL and len(core) == 2:
+        return P(*lead, _fit(core[0], mesh, FSDP_AXIS),
+                 _fit(core[1], mesh, TP_AXIS))
+    if name in _ROW_PARALLEL and len(core) == 2:
+        return P(*lead, _fit(core[0], mesh, TP_AXIS),
+                 _fit(core[1], mesh, FSDP_AXIS))
+    if name in ("conv_w", "conv_b"):
+        return P(*lead, *([None] * (len(core) - 1)),
+                 _fit(core[-1], mesh, TP_AXIS))
+    if len(core) == 2:
+        # default 2-D: fsdp x tp
+        return P(*lead, _fit(core[0], mesh, FSDP_AXIS),
+                 _fit(core[1], mesh, TP_AXIS))
+    return P(*lead, *([None] * len(core)))
+
+
+def _path_names(path) -> tuple:
+    names = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            names.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            names.append("segments" if not names or names[-1] != "segments"
+                         else "segments")
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            names.append(p.name)
+    return tuple(names)
+
+
+def param_specs(params, mesh):
+    """Pytree of PartitionSpecs matching `params` (works on abstract trees)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        names = _path_names(path)
+        # keep list-index context: a DictKey under "segments" list
+        full_names = tuple(
+            str(p.key) if isinstance(p, jax.tree_util.DictKey)
+            else "segments" for p in path)
+        specs.append(spec_for(full_names, np.shape(leaf), mesh))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_shardings(params, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), param_specs(params, mesh))
+
+
+# ------------------------- batch / cache specs ------------------------------
+def batch_spec(shape, mesh, *, field: str = "tokens") -> P:
+    """Shard the leading batch dim over (pod, data) when divisible."""
+    from repro.launch.mesh import data_axes
+    axes = data_axes(mesh)
+    b = shape[0]
+    total = 1
+    used = []
+    for a in axes:
+        if b % (total * _axis_size(mesh, a)) == 0:
+            used.append(a)
+            total *= _axis_size(mesh, a)
+    first = tuple(used) if used else None
+    rest = [None] * (len(shape) - 1)
+    return P(first if first else None, *rest)
+
+
+def batch_specs(batch_tree, mesh):
+    return jax.tree_util.tree_map(
+        lambda leaf: batch_spec(np.shape(leaf), mesh), batch_tree)
+
+
+def cache_specs(cache_tree, mesh, *, batch: int):
+    """KV caches (L, B, S, KV, hd): shard B over data axes when divisible,
+    else shard S (long-context B=1); shard KV heads or head_dim on model."""
+    from repro.launch.mesh import data_axes
+    daxes = data_axes(mesh)
+    dsize = 1
+    for a in daxes:
+        dsize *= _axis_size(mesh, a)
+
+    def spec(path, leaf) -> P:
+        shape = np.shape(leaf)
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        if name in ("k", "v"):          # (L, B, S, KV, hd)
+            l_, b_, s_, kv_, hd_ = shape
+            if b_ % dsize == 0:
+                bspec, sspec = tuple(daxes), None
+            elif s_ % dsize == 0:
+                bspec, sspec = None, tuple(daxes)
+            else:
+                bspec = sspec = None
+            kvspec = TP_AXIS if kv_ % _axis_size(mesh, TP_AXIS) == 0 else None
+            hdspec = None
+            if kvspec is None and hd_ % _axis_size(mesh, TP_AXIS) == 0:
+                hdspec = TP_AXIS
+            return P(None, bspec, sspec, kvspec, hdspec)
+        if name == "enc_out":           # (B, Senc, D)
+            b_, s_, d_ = shape
+            bspec = tuple(daxes) if b_ % dsize == 0 else None
+            return P(bspec, None,
+                     TP_AXIS if d_ % _axis_size(mesh, TP_AXIS) == 0 else None)
+        if name in ("h", "wkv"):        # SSM/WKV states (L, B, ...)
+            l_, b_ = shape[:2]
+            bspec = tuple(daxes) if b_ % dsize == 0 else None
+            rest = [None] * (len(shape) - 2)
+            # shard the largest trailing dim on model if divisible
+            for i in range(len(shape) - 1, 1, -1):
+                if shape[i] % _axis_size(mesh, TP_AXIS) == 0:
+                    rest[i - 2] = TP_AXIS
+                    break
+            return P(None, bspec, *rest)
+        if name in ("conv", "shift_t", "shift_c"):
+            l_, b_ = shape[:2]
+            bspec = tuple(daxes) if b_ % dsize == 0 else None
+            return P(None, bspec, *([None] * (len(shape) - 2)))
+        return P(*([None] * len(shape)))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec(p, l) for p, l in flat])

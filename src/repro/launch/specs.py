@@ -1,0 +1,58 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x input-shape) combo.
+
+No device allocation — everything here is abstract, so the full-size configs
+are exercised only via .lower()/.compile() (the dry-run).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro import models
+from repro.configs.base import InputShape, ModelConfig
+from repro.models.layers import dtype_of
+
+
+def effective_window(cfg: ModelConfig, shape: InputShape) -> int:
+    """long_500k on full-attention archs runs the documented sliding-window
+    variant (DESIGN.md §6); native sub-quadratic archs run unmodified."""
+    if shape.name == "long_500k" and cfg.long_context_mode == "window":
+        return cfg.attn_window_override
+    return 0
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """Abstract inputs for the step function of this shape's kind."""
+    b, s = shape.global_batch, shape.seq_len
+    cdt = dtype_of(cfg.compute_dtype)
+    tok = lambda *sh: jax.ShapeDtypeStruct(sh, jnp.int32)
+
+    if shape.kind == "train":
+        batch = {"tokens": tok(b, s), "labels": tok(b, s),
+                 "weight": jax.ShapeDtypeStruct((b,), jnp.float32)}
+        if cfg.encoder_layers:
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), cdt)
+        return {"batch": batch}
+
+    if shape.kind == "prefill":
+        out = {"tokens": tok(b, s)}
+        if cfg.encoder_layers:
+            out["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), cdt)
+        return out
+
+    if shape.kind == "decode":
+        cache = jax.eval_shape(
+            functools.partial(models.init_cache, cfg, b, s))
+        return {"cache": cache, "tokens": tok(b, 1),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    raise ValueError(shape.kind)
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(functools.partial(models.init_params, cfg),
+                          jax.random.PRNGKey(0))

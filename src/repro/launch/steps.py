@@ -1,0 +1,72 @@
+"""Step functions (train / prefill / decode) shared by the dry-run, the
+training driver and the serving driver."""
+from __future__ import annotations
+
+import functools
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+
+from repro import models
+from repro.configs.base import InputShape, ModelConfig
+from repro.core.spmd_dual_batch import SpmdDualBatch
+from repro.launch.specs import effective_window
+from repro.optim import Optimizer
+
+
+def with_window_override(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    w = effective_window(cfg, shape)
+    if w and not cfg.encoder_layers:
+        # mark every global-attention layer as sliding-window for this shape
+        return replace(cfg, local_global_ratio=0, attn_window=w,
+                       layer_pattern=tuple(
+                           "attn_local" if k in ("attn",) else k
+                           for k in cfg.blocks))
+    return cfg
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer):
+    """(params, opt_state, batch, lr) -> (params, opt_state, loss).
+
+    batch["weight"] carries the dual-batch per-example contributions."""
+    def train_step(params, opt_state, batch, lr):
+        def lf(p):
+            return models.loss_fn(p, cfg, batch)
+        (loss, _), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        params, opt_state = optimizer.update(grads, opt_state, params, lr)
+        return params, opt_state, loss
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """(params, tokens [, frames]) -> last-position logits (B, V)."""
+    if cfg.encoder_layers:
+        def prefill(params, tokens, frames):
+            logits = models.forward(params, cfg, tokens, frames,
+                                    last_only=True)
+            return logits[:, 0]
+    else:
+        def prefill(params, tokens):
+            logits = models.forward(params, cfg, tokens, last_only=True)
+            return logits[:, 0]
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, shape: InputShape | None = None):
+    """(params, cache, tokens, pos) -> (logits (B, V), new cache)."""
+    window = effective_window(cfg, shape) if shape is not None else 0
+
+    if cfg.encoder_layers:
+        def decode(params, cache, tokens, pos):
+            logits, cache = models.decode_step(params, cfg, cache, tokens,
+                                               pos, window=window)
+            return logits[:, 0], cache
+        return decode
+
+    cfg2 = with_window_override(cfg, shape) if shape is not None else cfg
+
+    def decode(params, cache, tokens, pos):
+        logits, cache = models.decode_step(params, cfg2, cache, tokens, pos)
+        return logits[:, 0], cache
+    return decode

@@ -1,0 +1,46 @@
+"""Unified model API, dispatched on ModelConfig.arch_type.
+
+    init_params(cfg, rng)                  -> params pytree
+    loss_fn(params, cfg, batch)            -> (loss, metrics)   [train]
+    forward(...)                           -> logits            [prefill/eval]
+    init_cache(cfg, batch, max_seq)        -> cache pytree      [decode]
+    decode_step(params, cfg, cache, tok, pos) -> (logits, cache)
+
+``batch`` dicts carry optional per-example ``weight`` — the hook used by
+dual-batch learning's model-update factor.
+"""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, resnet, transformer
+
+
+def _mod(cfg: ModelConfig):
+    if cfg.arch_type == "cnn":
+        return resnet
+    if cfg.encoder_layers:
+        return encdec
+    return transformer
+
+
+def init_params(cfg, rng):
+    return _mod(cfg).init_params(cfg, rng)
+
+
+def loss_fn(params, cfg, batch, **kw):
+    return _mod(cfg).loss_fn(params, cfg, batch, **kw)
+
+
+def forward(params, cfg, *args, **kw):
+    return _mod(cfg).forward(params, cfg, *args, **kw)
+
+
+def init_cache(cfg, batch, max_seq, dtype=None):
+    m = _mod(cfg)
+    if m is resnet:
+        raise ValueError("CNNs have no decode cache")
+    return m.init_cache(cfg, batch, max_seq, dtype)
+
+
+def decode_step(params, cfg, cache, tokens, pos, **kw):
+    return _mod(cfg).decode_step(params, cfg, cache, tokens, pos, **kw)

@@ -1,0 +1,182 @@
+"""GQA attention: chunked (flash-style) training/prefill path + decode path.
+
+The training path streams KV blocks with an online-softmax accumulator
+(lax.scan), so the S x S score matrix is never materialized — this is what
+keeps the 32k-prefill dry-run memory sane and is the XLA analogue of the
+Pallas flash kernel in ``repro.kernels.flash_attention`` (which is the TPU
+hot-path; this module is the lowering-friendly reference used under jit).
+
+Sliding windows are expressed per-layer as a dynamic scalar ``window``
+(0 = global) so heterogeneous local/global stacks (gemma3) can still be a
+single ``lax.scan`` over stacked layer params.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope
+
+NEG_INF = -1e30
+
+
+def gqa_expand(k, n_rep: int):
+    """(B, S, KV, hd) -> (B, S, KV*n_rep, hd) by head repetition."""
+    if n_rep == 1:
+        return k
+    b, s, kv, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, n_rep, hd)) \
+              .reshape(b, s, kv * n_rep, hd)
+
+
+def _block_mask(q_pos, k_pos, window):
+    """Causal + optional sliding-window mask. window is a traced scalar."""
+    diff = q_pos[:, None] - k_pos[None, :]
+    m = diff >= 0
+    m = jnp.logical_and(m, jnp.where(window > 0, diff < window, True))
+    return m
+
+
+def chunked_attention(q, k, v, *, window=0, causal=True, block_k: int = 1024,
+                      q_offset=0, causal_skip: bool = True):
+    """Flash-style attention with online softmax over KV blocks.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd) with H % KV == 0.
+    window: 0 (global) or int/traced scalar sliding window.
+    causal_skip: statically skip KV blocks that are entirely above the causal
+      diagonal (only valid when causal and q/k aligned; requires window to be
+      static if used with windows).
+    Returns (B, Sq, H, hd).
+    """
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    n_rep = h // kv
+    k = gqa_expand(k, n_rep)
+    v = gqa_expand(v, n_rep)
+
+    block_k = min(block_k, sk)
+    nkb = sk // block_k
+    rem = sk - nkb * block_k
+    scale = hd ** -0.5
+
+    # keep QKV in their native dtype (bf16 on TPU): the dots accumulate in
+    # f32 via preferred_element_type, halving HBM operand traffic vs f32
+    # copies (§Perf iteration 2)
+    qf = (q * scale).transpose(0, 2, 1, 3)                      # (B,H,Sq,hd)
+    kf = k.transpose(0, 2, 1, 3)                                # (B,H,Sk,hd)
+    vf = v.transpose(0, 2, 1, 3)
+    from repro.models.shard_ctx import constrain
+    qf = constrain(qf, "bh..")
+    kf = constrain(kf, "bh..")
+    vf = constrain(vf, "bh..")
+    q_pos = q_offset + jnp.arange(sq)
+
+    def attend_block(carry, kb, vb, k_pos):
+        m_prev, l_prev, acc = carry
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kb,
+                       preferred_element_type=jnp.float32)      # (B,H,Sq,bk)
+        if causal:
+            mask = _block_mask(q_pos, k_pos, window)
+            s = jnp.where(mask[None, None], s, NEG_INF)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[..., None])
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        # AV in the value dtype (bf16 on TPU), f32 accumulation
+        acc = acc * alpha[..., None] \
+            + jnp.einsum("bhqk,bhkd->bhqd", p.astype(vb.dtype), vb,
+                         preferred_element_type=jnp.float32)
+        return (m_cur, l_new, acc)
+
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, hd), jnp.float32)
+
+    if causal and causal_skip and isinstance(window, int) and sq == sk \
+            and isinstance(q_offset, int) and q_offset == 0:
+        # Static causal skipping: KV block j is needed only by q >= j*block_k.
+        # Scan blocks but bound work by processing blocks diagonally is not
+        # expressible with one scan; instead we drop blocks entirely above the
+        # diagonal via a scan over (block, needed) pairs would still compute.
+        # We fall through to the scan but note: the Pallas kernel does the
+        # true skipping; here skipping is a perf-pass option (see §Perf).
+        pass
+
+    kb = kf[:, :, :nkb * block_k].reshape(b, h, nkb, block_k, hd) \
+        .transpose(2, 0, 1, 3, 4)
+    vb = vf[:, :, :nkb * block_k].reshape(b, h, nkb, block_k, hd) \
+        .transpose(2, 0, 1, 3, 4)
+    kpos = jnp.arange(nkb * block_k).reshape(nkb, block_k)
+
+    def body(carry, xs):
+        return attend_block(carry, *xs), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, kpos))
+    if rem:
+        (m, l, acc) = attend_block((m, l, acc), kf[:, :, nkb * block_k:],
+                                   vf[:, :, nkb * block_k:],
+                                   jnp.arange(nkb * block_k, sk))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window: int = 0):
+    """Single-token decode attention over a KV cache.
+
+    q: (B, 1, H, hd); k_cache/v_cache: (B, S, KV, hd); pos: scalar int
+    (number of tokens already in cache, i.e. index of the new token).
+    window: static int; if >0, restrict attention to the last `window` keys.
+    """
+    b, _, h, hd = q.shape
+    s, kvh = k_cache.shape[1], k_cache.shape[2]
+    n_rep = h // kvh
+    from repro.models.shard_ctx import constrain
+    k = constrain(gqa_expand(k_cache, n_rep).astype(jnp.float32), "b.h.")
+    v = constrain(gqa_expand(v_cache, n_rep).astype(jnp.float32), "b.h.")
+    qf = constrain(q.astype(jnp.float32) * hd ** -0.5, "b.h.")
+    scores = jnp.einsum("bqhd,bshd->bhqs", qf, k)       # (B,H,1,S)
+    idx = jnp.arange(s)
+    valid = idx <= pos
+    if window > 0:
+        valid = jnp.logical_and(valid, idx > pos - window)
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", p, v)
+    return out.astype(q.dtype)
+
+
+# --------------------- full attention block -------------------------------
+def attn_project_qkv(p, x, positions, cfg):
+    b, s, _ = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (x @ p["wk"]).reshape(b, s, kvh, hd)
+    v = (x @ p["wv"]).reshape(b, s, kvh, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_block(p, x, cfg, *, window=0, positions=None, block_k=1024):
+    """Full training/prefill self-attention sublayer (no norm/residual)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = attn_project_qkv(p, x, positions, cfg)
+    o = chunked_attention(q, k, v, window=window, block_k=block_k)
+    return o.reshape(b, s, cfg.n_heads * cfg.head_dim) @ p["wo"]
+
+
+def cross_attention_block(p, x, enc_kv, cfg):
+    """Cross-attention for enc-dec: queries from x, keys/values precomputed
+    projections are applied here on enc activations (B, Senc, D)."""
+    b, s, _ = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    senc = enc_kv.shape[1]
+    k = (enc_kv @ p["wk"]).reshape(b, senc, kvh, hd)
+    v = (enc_kv @ p["wv"]).reshape(b, senc, kvh, hd)
+    o = chunked_attention(q, k, v, causal=False)
+    return o.reshape(b, s, h * hd) @ p["wo"]

@@ -1,0 +1,172 @@
+"""Encoder-decoder backbone (seamless-m4t): transformer encoder over stubbed
+audio frame embeddings + causal decoder with cross-attention.
+
+The mel-spectrogram/conformer feature extractor is the stubbed modality
+frontend — ``input_specs`` feeds precomputed (B, S_enc, D) frame embeddings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import (attention_block, cross_attention_block,
+                                    attn_project_qkv, chunked_attention)
+from repro.models.layers import cross_entropy, dtype_of, normal_init, rms_norm, swiglu
+from repro.models.transformer import (_init_attn_layer, _init_mlp,
+                                      decode_attention_dyn)
+
+
+def init_params(cfg: ModelConfig, rng):
+    dtype = dtype_of(cfg.param_dtype)
+    d, v = cfg.d_model, cfg.vocab_size
+    rngs = jax.random.split(rng, 6)
+
+    def enc_layer(r):
+        ks = jax.random.split(r, 2)
+        return {
+            "ln1": jnp.zeros((d,), jnp.float32),
+            "attn": _init_attn_layer(ks[0], cfg, dtype),
+            "ln2": jnp.zeros((d,), jnp.float32),
+            "mlp": _init_mlp(ks[1], cfg, dtype),
+        }
+
+    def dec_layer(r):
+        ks = jax.random.split(r, 3)
+        return {
+            "ln1": jnp.zeros((d,), jnp.float32),
+            "attn": _init_attn_layer(ks[0], cfg, dtype),
+            "lnx": jnp.zeros((d,), jnp.float32),
+            "xattn": _init_attn_layer(ks[1], cfg, dtype),
+            "ln2": jnp.zeros((d,), jnp.float32),
+            "mlp": _init_mlp(ks[2], cfg, dtype),
+        }
+
+    return {
+        "embed": normal_init(rngs[0], (v, d), 0.02, dtype),
+        "enc": jax.vmap(enc_layer)(
+            jax.random.split(rngs[1], cfg.encoder_layers)),
+        "dec": jax.vmap(dec_layer)(jax.random.split(rngs[2], cfg.n_layers)),
+        "enc_norm": jnp.zeros((d,), jnp.float32),
+        "final_norm": jnp.zeros((d,), jnp.float32),
+        "lm_head": normal_init(rngs[3], (v, d), d ** -0.5, dtype),
+    }
+
+
+def encode(params, cfg, frames):
+    """frames: (B, S_enc, D) precomputed frontend embeddings."""
+    x = frames.astype(dtype_of(cfg.compute_dtype))
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(x, p):
+        h = x + _bidir_attn(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps),
+                            cfg, positions)
+        y = swiglu(rms_norm(h, p["ln2"], cfg.norm_eps),
+                   p["mlp"]["wi"], p["mlp"]["wg"], p["mlp"]["wo"])
+        return h + y, None
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _bidir_attn(p, x, cfg, positions):
+    b, s, _ = x.shape
+    q, k, v = attn_project_qkv(p, x, positions, cfg)
+    o = chunked_attention(q, k, v, causal=False)
+    return o.reshape(b, s, cfg.n_heads * cfg.head_dim) @ p["wo"]
+
+
+def forward(params, cfg: ModelConfig, tokens, frames, *, drop_rng=None,
+            drop_rate=0.0, last_only: bool = False,
+            return_hidden: bool = False):
+    """tokens: (B, S_dec); frames: (B, S_enc, D) -> logits (B, S_dec, V)."""
+    enc_out = encode(params, cfg, frames)
+    cdt = dtype_of(cfg.compute_dtype)
+    x = params["embed"][tokens].astype(cdt)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(x, p):
+        h = x + attention_block(p["attn"],
+                                rms_norm(x, p["ln1"], cfg.norm_eps), cfg,
+                                positions=positions)
+        h = h + cross_attention_block(
+            p["xattn"], rms_norm(h, p["lnx"], cfg.norm_eps), enc_out, cfg)
+        y = swiglu(rms_norm(h, p["ln2"], cfg.norm_eps),
+                   p["mlp"]["wi"], p["mlp"]["wg"], p["mlp"]["wo"])
+        return h + y, None
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if last_only:
+        x = x[:, -1:]
+    if return_hidden:
+        return x
+    return jnp.einsum("bsd,vd->bsv", x, params["lm_head"])
+
+
+def loss_fn(params, cfg, batch, *, drop_rng=None, drop_rate=0.0):
+    if cfg.vocab_size >= 65536:
+        # stream CE over sequence chunks (256k vocab; see transformer.py)
+        from repro.models.layers import chunked_cross_entropy
+        hidden = forward(params, cfg, batch["tokens"], batch["frames"],
+                         drop_rng=drop_rng, drop_rate=drop_rate,
+                         return_hidden=True)
+        per_ex = chunked_cross_entropy(hidden, params["lm_head"],
+                                       batch["labels"])
+    else:
+        logits = forward(params, cfg, batch["tokens"], batch["frames"],
+                         drop_rng=drop_rng, drop_rate=drop_rate)
+        per_ex = cross_entropy(logits, batch["labels"])
+    w = batch.get("weight")
+    if w is None:
+        w = jnp.ones_like(per_ex)
+    loss = jnp.sum(per_ex * w) / jnp.maximum(jnp.sum(w), 1e-9)
+    return loss, {"loss": loss, "per_example": per_ex}
+
+
+# --------------------------- decode -----------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+    dtype = dtype or dtype_of(cfg.compute_dtype)
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, max_seq, kv, hd), dtype),
+        "v": jnp.zeros((cfg.n_layers, batch, max_seq, kv, hd), dtype),
+        # encoder output computed once at prefill
+        "enc_out": jnp.zeros((batch, cfg.encoder_seq, cfg.d_model), dtype),
+    }
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *, window=0):
+    cdt = dtype_of(cfg.compute_dtype)
+    x = params["embed"][tokens].astype(cdt)
+    b = x.shape[0]
+    enc_out = cache["enc_out"]
+
+    def body(x, xs):
+        p, ck, cv = xs
+        xin = rms_norm(x, p["ln1"], cfg.norm_eps)
+        positions = jnp.full((b, 1), pos, jnp.int32)
+        q, k, v = attn_project_qkv(p["attn"], xin, positions, cfg)
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, pos, 0, 0))
+        o = decode_attention_dyn(q, ck, cv, pos, window)
+        h = x + o.reshape(b, 1, cfg.n_heads * cfg.head_dim) @ p["attn"]["wo"]
+        h = h + cross_attention_block(
+            p["xattn"], rms_norm(h, p["lnx"], cfg.norm_eps), enc_out, cfg)
+        y = swiglu(rms_norm(h, p["ln2"], cfg.norm_eps),
+                   p["mlp"]["wi"], p["mlp"]["wg"], p["mlp"]["wo"])
+        return h + y, (ck, cv)
+
+    x, (ck, cv) = jax.lax.scan(body, x, (params["dec"], cache["k"],
+                                         cache["v"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["lm_head"])
+    return logits, {"k": ck, "v": cv, "enc_out": enc_out}

@@ -1,0 +1,182 @@
+"""Mamba2 (SSD) block: chunked parallel scan for train/prefill, O(1)
+recurrent update for decode.
+
+The chunked scan follows the SSD decomposition (Dao & Gu 2024): within a
+chunk the output is a masked (C_i . B_j) * decay matmul; across chunks a
+(heads, head_dim, d_state) carry state propagates with the chunk's total
+decay.  ``repro.kernels.mamba_scan`` is the Pallas TPU version of the same
+algorithm; this module is the XLA path and the oracle's building block.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm
+
+
+def ssd_chunked(x, dt, A_log, B, C, D_skip, *, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    x: (Bt, S, H, P)   values (P = head_dim)
+    dt: (Bt, S, H)     softplus'd step sizes
+    A_log: (H,)        log of -A (per-head decay rate)
+    B, C: (Bt, S, N)   input/output projections (single group)
+    D_skip: (H,)       skip connection
+    h0: optional (Bt, H, P, N) initial state
+    Returns y (Bt, S, H, P) and final state (Bt, H, P, N).
+    """
+    bt, s, h, p = x.shape
+    n = B.shape[-1]
+    q = min(chunk, s)
+    while s % q:
+        q -= 1
+    nc = s // q
+
+    a = -jnp.exp(A_log.astype(jnp.float32))                    # (H,)
+    dtf = dt.astype(jnp.float32)
+    la = dtf * a                                               # (Bt,S,H) log-decay
+    xf = (x.astype(jnp.float32) * dtf[..., None])              # dt-weighted input
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+
+    # reshape into chunks
+    lac = la.reshape(bt, nc, q, h).transpose(1, 0, 3, 2)        # (nc,Bt,H,Q)
+    xc = xf.reshape(bt, nc, q, h, p).transpose(1, 0, 3, 2, 4)   # (nc,Bt,H,Q,P)
+    Bc = Bf.reshape(bt, nc, q, n).transpose(1, 0, 2, 3)         # (nc,Bt,Q,N)
+    Cc = Cf.reshape(bt, nc, q, n).transpose(1, 0, 2, 3)
+
+    if h0 is None:
+        h0 = jnp.zeros((bt, h, p, n), jnp.float32)
+
+    idx = jnp.arange(q)
+    tri = idx[:, None] >= idx[None, :]                          # (Q,Q) causal
+
+    def body(hprev, xs):
+        lak, xk, Bk, Ck = xs
+        cum = jnp.cumsum(lak, axis=-1)                          # (Bt,H,Q)
+        # intra-chunk: decay(i<-j) = exp(cum_i - cum_j) for j<=i
+        dmat = jnp.exp(jnp.where(tri, cum[..., :, None] - cum[..., None, :],
+                                 -jnp.inf))                     # (Bt,H,Q,Q)
+        cb = jnp.einsum("bin,bjn->bij", Ck, Bk)                 # (Bt,Q,Q)
+        y_intra = jnp.einsum("bij,bhij,bhjp->bhip", cb, dmat, xk)
+        # inter-chunk: y_i += exp(cum_i) C_i . h_prev
+        dec_in = jnp.exp(cum)                                   # (Bt,H,Q)
+        y_inter = jnp.einsum("bin,bhpn,bhi->bhip", Ck, hprev, dec_in)
+        # state update: h = exp(cum_Q) h + sum_j exp(cum_Q-cum_j) B_j x_j
+        tot = cum[..., -1:]                                     # (Bt,H,1)
+        dec_out = jnp.exp(tot - cum)                            # (Bt,H,Q)
+        hnew = hprev * jnp.exp(tot)[..., None].transpose(0, 1, 3, 2) \
+            + jnp.einsum("bhj,bjn,bhjp->bhpn", dec_out, Bk, xk)
+        return hnew, y_intra + y_inter
+
+    hfin, yc = jax.lax.scan(body, h0, (lac, xc, Bc, Cc))        # yc (nc,Bt,H,Q,P)
+    y = yc.transpose(1, 0, 3, 2, 4).reshape(bt, s, h, p)
+    y = y + x.astype(jnp.float32) * D_skip.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype), hfin
+
+
+def ssd_decode_step(h, x, dt, A_log, B, C, D_skip):
+    """One recurrent SSD step.
+
+    h: (Bt, H, P, N); x: (Bt, H, P); dt: (Bt, H); B, C: (Bt, N).
+    Returns y (Bt, H, P), new state.
+    """
+    a = -jnp.exp(A_log.astype(jnp.float32))
+    alpha = jnp.exp(dt.astype(jnp.float32) * a)                 # (Bt,H)
+    xin = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+    hnew = h * alpha[..., None, None] \
+        + jnp.einsum("bhp,bn->bhpn", xin, B.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", hnew, C.astype(jnp.float32))
+    y = y + x.astype(jnp.float32) * D_skip.astype(jnp.float32)[None, :, None]
+    return y.astype(x.dtype), hnew
+
+
+def causal_conv1d(x, w, b, *, state=None):
+    """Depthwise causal conv. x: (Bt, S, Ch); w: (K, Ch); b: (Ch,).
+
+    state: optional (Bt, K-1, Ch) left context (decode).  Returns conv out and
+    the new state (last K-1 inputs).
+    """
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)                    # (Bt,S+K-1,Ch)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):, :] if k > 1 else state
+    return out + b, new_state
+
+
+def mamba2_split(p, x, cfg):
+    """Apply in_proj and split into (z, xs, B, C, dt)."""
+    s_cfg = cfg.ssm
+    d_in = s_cfg.expand * cfg.d_model
+    n = s_cfg.d_state
+    nh = d_in // s_cfg.head_dim
+    proj = x @ p["w_in"]                                        # (...,2di+2n+nh)
+    z, xs, Bv, Cv, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    return z, xs, Bv, Cv, dt, d_in, n, nh
+
+
+def mamba2_block(p, x, cfg):
+    """Full Mamba2 block for train/prefill.  x: (Bt, S, D) -> (Bt, S, D)."""
+    s_cfg = cfg.ssm
+    bt, s, _ = x.shape
+    z, xs, Bv, Cv, dt, d_in, n, nh = mamba2_split(p, x, cfg)
+    conv_in = jnp.concatenate([xs, Bv, Cv], axis=-1)
+    conv_out, _ = causal_conv1d(conv_in, p["conv_w"], p["conv_b"])
+    conv_out = jax.nn.silu(conv_out)
+    xs, Bv, Cv = jnp.split(conv_out, [d_in, d_in + n], axis=-1)
+    from repro.models.shard_ctx import constrain
+    xh = constrain(xs.reshape(bt, s, nh, s_cfg.head_dim), "b.h.")
+    dt = constrain(dt, "b.h")
+    y, _ = ssd_chunked(xh, dt, p["A_log"], Bv, Cv, p["D"], chunk=s_cfg.chunk)
+    y = y.reshape(bt, s, d_in) * jax.nn.silu(z)
+    y = rms_norm(y, p["out_norm"], cfg.norm_eps)
+    return y @ p["w_out"]
+
+
+def mamba2_decode(p, x, cfg, state):
+    """One decode step.  x: (Bt, 1, D); state: {"h","conv"}."""
+    s_cfg = cfg.ssm
+    bt = x.shape[0]
+    z, xs, Bv, Cv, dt, d_in, n, nh = mamba2_split(p, x, cfg)
+    conv_in = jnp.concatenate([xs, Bv, Cv], axis=-1)
+    conv_out, conv_state = causal_conv1d(conv_in, p["conv_w"], p["conv_b"],
+                                         state=state["conv"])
+    conv_out = jax.nn.silu(conv_out)
+    xs, Bv, Cv = jnp.split(conv_out, [d_in, d_in + n], axis=-1)
+    xh = xs[:, 0].reshape(bt, nh, s_cfg.head_dim)
+    y, h = ssd_decode_step(state["h"], xh, dt[:, 0], p["A_log"],
+                           Bv[:, 0], Cv[:, 0], p["D"])
+    y = y.reshape(bt, 1, d_in) * jax.nn.silu(z)
+    y = rms_norm(y, p["out_norm"], cfg.norm_eps)
+    return y @ p["w_out"], {"h": h, "conv": conv_state}
+
+
+def init_mamba2(rng, cfg, dtype):
+    import numpy as np
+    s_cfg = cfg.ssm
+    d = cfg.d_model
+    d_in = s_cfg.expand * d
+    n = s_cfg.d_state
+    nh = d_in // s_cfg.head_dim
+    conv_ch = d_in + 2 * n
+    ks = jax.random.split(rng, 4)
+    scale = d ** -0.5
+    from repro.models.layers import normal_init
+    return {
+        "w_in": normal_init(ks[0], (d, 2 * d_in + 2 * n + nh), scale, dtype),
+        "conv_w": normal_init(ks[1], (s_cfg.d_conv, conv_ch),
+                              s_cfg.d_conv ** -0.5, dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "dt_bias": jnp.asarray(
+            np.log(np.expm1(np.linspace(1e-3, 0.1, nh))), jnp.float32),
+        "A_log": jnp.asarray(np.log(np.linspace(1.0, 16.0, nh)), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "out_norm": jnp.zeros((d_in,), jnp.float32),
+        "w_out": normal_init(ks[2], (d_in, d), d_in ** -0.5, dtype),
+    }

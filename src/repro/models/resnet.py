@@ -1,0 +1,117 @@
+"""ResNet-18 in pure JAX — the paper's evaluation model (CIFAR variant).
+
+Variable input resolution is supported via global average pooling, which is
+exactly the property the paper's cyclic progressive learning relies on (§6).
+Width is configurable so the CPU-scale faithful repro can use a slim stack.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import normal_init
+
+
+def conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def batch_norm_infer(x, p, eps=1e-5):
+    """Instance norm + affine: normalizes over spatial dims per sample, so no
+    running stats need to flow through the PS simulator and train/eval
+    behaviour is identical (BN substitute at CIFAR scale)."""
+    mean = jnp.mean(x, axis=(1, 2), keepdims=True)
+    var = jnp.var(x, axis=(1, 2), keepdims=True)
+    xn = (x - mean) * jax.lax.rsqrt(var + eps)
+    return xn * p["scale"] + p["bias"]
+
+
+def _init_conv(rng, k, cin, cout):
+    fan_in = k * k * cin
+    return normal_init(rng, (k, k, cin, cout), (2.0 / fan_in) ** 0.5,
+                       jnp.float32)
+
+
+def _init_bn(c):
+    return {"scale": jnp.ones((c,), jnp.float32),
+            "bias": jnp.zeros((c,), jnp.float32)}
+
+
+def _init_basic_block(rng, cin, cout, stride):
+    ks = jax.random.split(rng, 3)
+    p = {
+        "conv1": _init_conv(ks[0], 3, cin, cout), "bn1": _init_bn(cout),
+        "conv2": _init_conv(ks[1], 3, cout, cout), "bn2": _init_bn(cout),
+    }
+    if stride != 1 or cin != cout:
+        p["proj"] = _init_conv(ks[2], 1, cin, cout)
+        p["bnp"] = _init_bn(cout)
+    return p
+
+
+def init_params(cfg, rng, width: int | None = None):
+    """cfg: ModelConfig with arch_type == 'cnn'. vocab_size = num classes."""
+    w = width or cfg.d_model          # stem width (64 for real ResNet-18)
+    num_classes = cfg.vocab_size
+    widths = [w, 2 * w, 4 * w, 8 * w]
+    strides = [1, 2, 2, 2]
+    rngs = jax.random.split(rng, 11)
+    params = {
+        "stem": _init_conv(rngs[0], 3, 3, w), "bn0": _init_bn(w),
+        "stages": [],
+    }
+    cin = w
+    i = 1
+    for wo, st in zip(widths, strides):
+        blocks = []
+        for b in range(2):                   # ResNet-18: two blocks per stage
+            blocks.append(_init_basic_block(rngs[i], cin, wo,
+                                            st if b == 0 else 1))
+            cin = wo
+            i += 1
+        params["stages"].append(blocks)
+    params["fc_w"] = normal_init(rngs[i], (cin, num_classes),
+                                 cin ** -0.5, jnp.float32)
+    params["fc_b"] = jnp.zeros((num_classes,), jnp.float32)
+    return params
+
+
+def _basic_block(p, x, stride):
+    h = jax.nn.relu(batch_norm_infer(conv(x, p["conv1"], stride), p["bn1"]))
+    h = batch_norm_infer(conv(h, p["conv2"], 1), p["bn2"])
+    if "proj" in p:
+        x = batch_norm_infer(conv(x, p["proj"], stride), p["bnp"])
+    return jax.nn.relu(x + h)
+
+
+def forward(params, cfg, images, *, drop_rng=None, drop_rate=0.0):
+    """images: (B, H, W, 3) any resolution -> logits (B, classes)."""
+    x = jax.nn.relu(batch_norm_infer(conv(images, params["stem"], 1),
+                                     params["bn0"]))
+    strides = [1, 2, 2, 2]
+    for st, blocks in zip(strides, params["stages"]):
+        for b, bp in enumerate(blocks):
+            x = _basic_block(bp, x, st if b == 0 else 1)
+    x = jnp.mean(x, axis=(1, 2))                 # global average pool
+    if drop_rng is not None and drop_rate > 0.0:
+        from repro.models.layers import dropout
+        x = dropout(x, drop_rng, drop_rate)
+    return x @ params["fc_w"] + params["fc_b"]
+
+
+def loss_fn(params, cfg, batch, *, drop_rng=None, drop_rate=0.0):
+    """batch: {"images": (B,H,W,3), "labels": (B,), "weight": (B,)?}."""
+    logits = forward(params, cfg, batch["images"], drop_rng=drop_rng,
+                     drop_rate=drop_rate).astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["labels"][:, None], axis=-1)[:, 0]
+    per_ex = logz - gold
+    w = batch.get("weight")
+    if w is None:
+        w = jnp.ones_like(per_ex)
+    loss = jnp.sum(per_ex * w) / jnp.maximum(jnp.sum(w), 1e-9)
+    acc = jnp.mean((jnp.argmax(logits, -1) == batch["labels"]).astype(
+        jnp.float32))
+    return loss, {"loss": loss, "accuracy": acc, "per_example": per_ex}

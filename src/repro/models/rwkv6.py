@@ -1,0 +1,146 @@
+"""RWKV-6 (Finch) block: time-mix with data-dependent decay + channel-mix.
+
+Train/prefill uses a lax.scan over time (the WKV recurrence);
+``repro.kernels.wkv6`` is the Pallas chunked TPU version.  Decode is a single
+recurrent update on the (H, hd, hd) state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import normal_init
+
+
+def token_shift(x, shift_state=None):
+    """Return previous-token tensor. x: (B, S, D)."""
+    if shift_state is None:
+        shift_state = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([shift_state, x[:, :-1]], axis=1)
+
+
+def wkv6_scan(r, k, v, w, u, state=None, chunk: int = 64):
+    """WKV6 recurrence, chunked so backward memory is O(S/chunk) states.
+
+    r,k,w: (B,S,H,K); v: (B,S,H,V); u: (H,K) bonus; state: (B,H,K,V).
+    y_t = r_t . (S_{t-1} + diag(u) k_t v_t^T);  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    The outer scan stores one state per chunk; the inner (checkpointed) scan
+    recomputes within-chunk carries on the backward pass.
+    Returns y (B,S,H,V), final state.
+    """
+    b, s, h, kd = r.shape
+    vd = v.shape[-1]
+    if state is None:
+        state = jnp.zeros((b, h, kd, vd), jnp.float32)
+    q = min(chunk, s)
+    while s % q:
+        q -= 1
+    nc = s // q
+
+    def to_chunks(x):
+        return x.astype(jnp.float32).reshape(b, nc, q, h, -1) \
+            .transpose(1, 2, 0, 3, 4)                       # (nc,Q,B,H,*)
+
+    rf, kf, vf, wf = map(to_chunks, (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, S + uf[None, :, :, None] * kv)
+        S = S * wt[..., None] + kv
+        return S, y
+
+    @jax.checkpoint
+    def chunk_body(S, xs):
+        return jax.lax.scan(step, S, xs)
+
+    state, ys = jax.lax.scan(chunk_body, state, (rf, kf, vf, wf))
+    y = ys.transpose(2, 0, 1, 3, 4).reshape(b, s, h, vd)    # (B,S,H,V)
+    return y, state
+
+
+def wkv6_step(S, r, k, v, w, u):
+    """Single decode step. r,k,w: (B,H,K); v: (B,H,V); S: (B,H,K,V)."""
+    kv = jnp.einsum("bhk,bhv->bhkv", k.astype(jnp.float32),
+                    v.astype(jnp.float32))
+    y = jnp.einsum("bhk,bhkv->bhv", r.astype(jnp.float32),
+                   S + u.astype(jnp.float32)[None, :, :, None] * kv)
+    S = S * w.astype(jnp.float32)[..., None] + kv
+    return y, S
+
+
+def _ddecay(p, xw):
+    """Data-dependent decay (the RWKV6 signature): w = exp(-exp(w0 + lora))."""
+    lora = jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]
+    logw = p["w0"].astype(jnp.float32) + lora.astype(jnp.float32)
+    return jnp.exp(-jnp.exp(logw))
+
+
+def _mix(x, xx, mu):
+    return x + (xx - x) * mu
+
+
+def time_mix(p, x, cfg, *, shift_state=None, wkv_state=None, decode=False):
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    xx = token_shift(x, shift_state)
+    r = _mix(x, xx, p["mu_r"]) @ p["w_r"]
+    k = _mix(x, xx, p["mu_k"]) @ p["w_k"]
+    v = _mix(x, xx, p["mu_v"]) @ p["w_v"]
+    g = jax.nn.silu(_mix(x, xx, p["mu_g"]) @ p["w_g"])
+    w = _ddecay(p, _mix(x, xx, p["mu_w"]))                     # (B,S,D)
+
+    from repro.models.shard_ctx import constrain
+    r = constrain(r.reshape(b, s, h, hd), "b.h.")
+    k = constrain(k.reshape(b, s, h, hd), "b.h.")
+    v = constrain(v.reshape(b, s, h, hd), "b.h.")
+    w = constrain(w.reshape(b, s, h, hd), "b.h.")
+    if decode:
+        y, wkv_state = wkv6_step(wkv_state, r[:, 0], k[:, 0], v[:, 0],
+                                 w[:, 0], p["u"])
+        y = y[:, None]
+    else:
+        y, wkv_state = wkv6_scan(r, k, v, w, p["u"], wkv_state)
+    # per-head group norm
+    yf = y.astype(jnp.float32)
+    mean = jnp.mean(yf, axis=-1, keepdims=True)
+    var = jnp.var(yf, axis=-1, keepdims=True)
+    y = ((yf - mean) * jax.lax.rsqrt(var + 64e-5)).astype(x.dtype)
+    y = y.reshape(b, s, d) * g
+    return y @ p["w_o"], x[:, -1:], wkv_state
+
+
+def channel_mix(p, x, cfg, *, shift_state=None):
+    xx = token_shift(x, shift_state)
+    xk = _mix(x, xx, p["cmu_k"])
+    xr = _mix(x, xx, p["cmu_r"])
+    kk = jnp.square(jax.nn.relu(xk @ p["cw_k"]))
+    return jax.nn.sigmoid(xr @ p["cw_r"]) * (kk @ p["cw_v"]), x[:, -1:]
+
+
+def init_rwkv6(rng, cfg, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    h, hd = cfg.n_heads, cfg.head_dim
+    lora_r = max(16, d // 64)
+    ks = jax.random.split(rng, 9)
+    sc = d ** -0.5
+    mus = {f"mu_{n}": jnp.full((d,), 0.5, dtype) for n in "rkvgw"}
+    return {
+        **mus,
+        "w_r": normal_init(ks[0], (d, d), sc, dtype),
+        "w_k": normal_init(ks[1], (d, d), sc, dtype),
+        "w_v": normal_init(ks[2], (d, d), sc, dtype),
+        "w_g": normal_init(ks[3], (d, d), sc, dtype),
+        "w_o": normal_init(ks[4], (d, d), sc, dtype),
+        "w_lora_a": normal_init(ks[5], (d, lora_r), sc, dtype),
+        "w_lora_b": normal_init(ks[6], (lora_r, d), lora_r ** -0.5, dtype),
+        "w0": jnp.full((d,), -2.0, jnp.float32),
+        "u": normal_init(ks[7], (h, hd), 0.5, jnp.float32),
+        "cmu_k": jnp.full((d,), 0.5, dtype),
+        "cmu_r": jnp.full((d,), 0.5, dtype),
+        "cw_k": normal_init(ks[8], (d, f), sc, dtype),
+        "cw_v": normal_init(jax.random.fold_in(rng, 99), (f, d),
+                            f ** -0.5, dtype),
+        "cw_r": normal_init(jax.random.fold_in(rng, 98), (d, d), sc, dtype),
+    }

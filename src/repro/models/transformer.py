@@ -1,0 +1,419 @@
+"""Decoder-only LM assembly for all assigned architectures.
+
+The layer stack is compiled as a list of *segments* — maximal runs of
+identical block kinds — each executed as one ``lax.scan`` over stacked
+per-layer params.  Local/global attention (gemma3) stays a single segment:
+the sliding window is a per-layer scanned scalar (0 = global).  Hybrid
+stacks (zamba2) alternate mamba2 segments with a weight-tied shared
+attention block.  Decode also scans over layers, carrying per-layer KV
+caches / SSM states as scan inputs+outputs, so even 126-layer decode steps
+lower to a compact HLO.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ATTN, ATTN_LOCAL, MAMBA2, ModelConfig, RWKV6,
+                                SHARED_ATTN)
+from repro.models import mamba2 as m2
+from repro.models import rwkv6 as rk
+from repro.models.attention import (attention_block, decode_attention,
+                                    attn_project_qkv, chunked_attention)
+from repro.models.layers import (apply_rope, cross_entropy, dropout, dtype_of,
+                                 normal_init, rms_norm, swiglu)
+from repro.models.moe import moe_ffn
+
+
+@dataclass(frozen=True)
+class Segment:
+    kind: str                 # "attn" | "mamba2" | "rwkv6" | "shared_attn"
+    count: int
+    windows: Tuple[int, ...]  # per-layer window (attn segments; 0=global)
+
+
+def layout(cfg: ModelConfig) -> Tuple[Segment, ...]:
+    segs = []
+    for kind in cfg.blocks:
+        w = 0
+        k = kind
+        if kind == ATTN_LOCAL:
+            k, w = ATTN, cfg.attn_window
+        if segs and segs[-1][0] == k and k != SHARED_ATTN:
+            segs[-1][1] += 1
+            segs[-1][2].append(w)
+        else:
+            segs.append([k, 1, [w]])
+    return tuple(Segment(k, c, tuple(ws)) for k, c, ws in segs)
+
+
+# --------------------------- init ------------------------------------------
+def _init_attn_layer(rng, cfg, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(rng, 4)
+    sc = d ** -0.5
+    return {
+        "wq": normal_init(ks[0], (d, h * hd), sc, dtype),
+        "wk": normal_init(ks[1], (d, kv * hd), sc, dtype),
+        "wv": normal_init(ks[2], (d, kv * hd), sc, dtype),
+        "wo": normal_init(ks[3], (h * hd, d), (h * hd) ** -0.5, dtype),
+    }
+
+
+def _init_mlp(rng, cfg, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    return {
+        "wi": normal_init(ks[0], (d, f), d ** -0.5, dtype),
+        "wg": normal_init(ks[1], (d, f), d ** -0.5, dtype),
+        "wo": normal_init(ks[2], (f, d), f ** -0.5, dtype),
+    }
+
+
+def _init_moe(rng, cfg, dtype):
+    e = cfg.moe
+    d = cfg.d_model
+    ne = e.padded_experts     # router-masked padding experts (if pad_to)
+    ks = jax.random.split(rng, 5)
+    p = {
+        "router": normal_init(ks[0], (d, ne), d ** -0.5,
+                              jnp.float32),
+        "wi": normal_init(ks[1], (ne, d, e.d_ff_expert),
+                          d ** -0.5, dtype),
+        "wg": normal_init(ks[2], (ne, d, e.d_ff_expert),
+                          d ** -0.5, dtype),
+        "wo": normal_init(ks[3], (ne, e.d_ff_expert, d),
+                          e.d_ff_expert ** -0.5, dtype),
+    }
+    if e.dense_residual:
+        mlp = _init_mlp(ks[4], cfg, dtype)
+        p.update({"res_wi": mlp["wi"], "res_wg": mlp["wg"],
+                  "res_wo": mlp["wo"]})
+    return p
+
+
+def _init_block(rng, cfg, kind, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(rng, 3)
+    p = {"ln1": jnp.zeros((d,), jnp.float32)}
+    if kind == ATTN:
+        p["attn"] = _init_attn_layer(ks[0], cfg, dtype)
+        p["ln2"] = jnp.zeros((d,), jnp.float32)
+        p["moe" if cfg.moe else "mlp"] = (
+            _init_moe(ks[1], cfg, dtype) if cfg.moe
+            else _init_mlp(ks[1], cfg, dtype))
+    elif kind == MAMBA2:
+        p["mamba"] = m2.init_mamba2(ks[0], cfg, dtype)
+    elif kind == RWKV6:
+        p["rwkv"] = rk.init_rwkv6(ks[0], cfg, dtype)
+        p["ln2"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def init_params(cfg: ModelConfig, rng):
+    """Initialize the full parameter pytree (use jax.eval_shape for dry-run)."""
+    dtype = dtype_of(cfg.param_dtype)
+    d, v = cfg.d_model, cfg.vocab_size
+    rngs = jax.random.split(rng, 8)
+    segs = layout(cfg)
+    params = {
+        "embed": normal_init(rngs[0], (v, d), 0.02, dtype),
+        "final_norm": jnp.zeros((d,), jnp.float32),
+        "segments": [],
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = normal_init(rngs[1], (v, d), d ** -0.5, dtype)
+    if cfg.shared_every:
+        params["shared"] = _init_block(rngs[2], cfg, ATTN, dtype)
+    for i, seg in enumerate(segs):
+        if seg.kind == SHARED_ATTN:
+            params["segments"].append({})
+            continue
+        seg_rngs = jax.random.split(jax.random.fold_in(rngs[3], i), seg.count)
+        stacked = jax.vmap(
+            lambda r: _init_block(r, cfg, seg.kind, dtype))(seg_rngs)
+        params["segments"].append(stacked)
+    return params
+
+
+# --------------------------- forward ----------------------------------------
+def _attn_block_body(p, x, cfg, window, positions, drop_rng, drop_rate):
+    h = x + attention_block(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps),
+                            cfg, window=window, positions=positions)
+    hin = rms_norm(h, p["ln2"], cfg.norm_eps)
+    if cfg.moe:
+        y, aux = moe_ffn(p["moe"], hin, cfg.moe)
+    else:
+        y, aux = swiglu(hin, p["mlp"]["wi"], p["mlp"]["wg"],
+                        p["mlp"]["wo"]), 0.0
+    y = dropout(y, drop_rng, drop_rate)
+    return h + y, aux
+
+
+def _mamba_block_body(p, x, cfg):
+    return x + m2.mamba2_block(p["mamba"], rms_norm(x, p["ln1"],
+                                                    cfg.norm_eps), cfg)
+
+
+def _rwkv_block_body(p, x, cfg):
+    y, _, _ = rk.time_mix(p["rwkv"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg)
+    h = x + y
+    y, _ = rk.channel_mix(p["rwkv"], rms_norm(h, p["ln2"], cfg.norm_eps), cfg)
+    return h + y
+
+
+def forward(params, cfg: ModelConfig, tokens, *, drop_rng=None,
+            drop_rate=0.0, positions=None, embeddings=None,
+            return_aux: bool = False, last_only: bool = False,
+            return_hidden: bool = False):
+    """tokens: (B, S) int32 -> logits (B, S, V) [, aux load-balance loss].
+
+    embeddings: optional (B, S, D) — overrides token embedding (stubbed
+    modality frontends provide these directly).
+    """
+    cdt = dtype_of(cfg.compute_dtype)
+    if embeddings is None:
+        x = params["embed"][tokens].astype(cdt)
+    else:
+        x = embeddings.astype(cdt)
+    b, s = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    aux_total = 0.0
+    li = 0
+    for seg, sp in zip(layout(cfg), params["segments"]):
+        if seg.kind == SHARED_ATTN:
+            x, aux = _attn_block_body(
+                params["shared"], x, cfg, 0, positions,
+                None if drop_rng is None else jax.random.fold_in(drop_rng, li),
+                drop_rate)
+            aux_total = aux_total + aux
+            li += 1
+            continue
+
+        windows = jnp.asarray(seg.windows, jnp.int32)
+        idxs = jnp.arange(seg.count) + li
+
+        if seg.kind == ATTN:
+            def body(x, xs):
+                p, w, i = xs
+                r = (None if drop_rng is None
+                     else jax.random.fold_in(drop_rng, i))
+                return _attn_block_body(p, x, cfg, w, positions, r, drop_rate)
+            xs = (sp, windows, idxs)
+        elif seg.kind == MAMBA2:
+            def body(x, xs):
+                return _mamba_block_body(xs[0], x, cfg), 0.0
+            xs = (sp,)
+        elif seg.kind == RWKV6:
+            def body(x, xs):
+                return _rwkv_block_body(xs[0], x, cfg), 0.0
+            xs = (sp,)
+        else:
+            raise ValueError(seg.kind)
+
+        if cfg.remat == "block":
+            body = jax.checkpoint(body)
+        elif cfg.remat == "dots":
+            # save matmul outputs, recompute the rest: removes the extra
+            # forward's dot FLOPs from the backward pass (§Perf iteration 2)
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.dots_saveable)
+        x, auxs = jax.lax.scan(body, x, xs)
+        aux_total = aux_total + jnp.sum(jnp.asarray(auxs))
+        li += seg.count
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if last_only:
+        x = x[:, -1:]
+    if return_hidden:
+        return (x, aux_total) if return_aux else x
+    head = params.get("lm_head", params["embed"])
+    logits = jnp.einsum("bsd,vd->bsv", x, head)
+    if return_aux:
+        return logits, aux_total
+    return logits
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, drop_rng=None, drop_rate=0.0):
+    """Weighted-example LM loss — the dual-batch hook.
+
+    batch: {"tokens": (B,S), "labels": (B,S),
+            "weight": (B,) per-example contribution (model-update factor x
+            validity mask; see core/spmd_dual_batch.py),
+            optional "embeddings": (B,S,D)}
+    Returns (loss, metrics).
+    """
+    big_vocab = cfg.vocab_size >= 65536
+    if big_vocab:
+        # stream CE over sequence chunks so the (B,S,V) f32 logits tensor
+        # never materializes (256k-vocab heads; numerically identical —
+        # tests/test_kernels.py::test_chunked_cross_entropy_matches_dense)
+        from repro.models.layers import chunked_cross_entropy
+        hidden, aux = forward(params, cfg, batch["tokens"],
+                              drop_rng=drop_rng, drop_rate=drop_rate,
+                              embeddings=batch.get("embeddings"),
+                              return_aux=True, return_hidden=True)
+        head = params.get("lm_head", params["embed"])
+        per_ex = chunked_cross_entropy(hidden, head, batch["labels"])
+    else:
+        logits, aux = forward(params, cfg, batch["tokens"],
+                              drop_rng=drop_rng, drop_rate=drop_rate,
+                              embeddings=batch.get("embeddings"),
+                              return_aux=True)
+        per_ex = cross_entropy(logits, batch["labels"])        # (B,)
+    w = batch.get("weight")
+    if w is None:
+        w = jnp.ones_like(per_ex)
+    loss = jnp.sum(per_ex * w) / jnp.maximum(jnp.sum(w), 1e-9)
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.router_aux_weight * aux / max(cfg.n_layers, 1)
+    return loss, {"loss": loss, "per_example": per_ex}
+
+
+# --------------------------- decode -----------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+    """Per-segment cache pytree for single-token decode."""
+    dtype = dtype or dtype_of(cfg.compute_dtype)
+    caches = []
+    for seg in layout(cfg):
+        if seg.kind == ATTN:
+            kv, hd = cfg.n_kv_heads, cfg.head_dim
+            caches.append({
+                "k": jnp.zeros((seg.count, batch, max_seq, kv, hd), dtype),
+                "v": jnp.zeros((seg.count, batch, max_seq, kv, hd), dtype),
+            })
+        elif seg.kind == SHARED_ATTN:
+            kv, hd = cfg.n_kv_heads, cfg.head_dim
+            caches.append({
+                "k": jnp.zeros((1, batch, max_seq, kv, hd), dtype),
+                "v": jnp.zeros((1, batch, max_seq, kv, hd), dtype),
+            })
+        elif seg.kind == MAMBA2:
+            s = cfg.ssm
+            d_in = s.expand * cfg.d_model
+            nh = d_in // s.head_dim
+            caches.append({
+                "h": jnp.zeros((seg.count, batch, nh, s.head_dim, s.d_state),
+                               jnp.float32),
+                "conv": jnp.zeros((seg.count, batch, s.d_conv - 1,
+                                   d_in + 2 * s.d_state), dtype),
+            })
+        elif seg.kind == RWKV6:
+            h, hd = cfg.n_heads, cfg.head_dim
+            d = cfg.d_model
+            caches.append({
+                "wkv": jnp.zeros((seg.count, batch, h, hd, hd), jnp.float32),
+                "shift_t": jnp.zeros((seg.count, batch, 1, d), dtype),
+                "shift_c": jnp.zeros((seg.count, batch, 1, d), dtype),
+            })
+    return caches
+
+
+def _decode_attn_layer(p, x, cfg, cache_k, cache_v, window, pos):
+    b = x.shape[0]
+    xin = rms_norm(x, p["ln1"], cfg.norm_eps)
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = attn_project_qkv(p["attn"], xin, positions, cfg)
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0))
+    o = decode_attention_dyn(q, cache_k, cache_v, pos, window)
+    h = x + o.reshape(b, 1, cfg.n_heads * cfg.head_dim) @ p["attn"]["wo"]
+    hin = rms_norm(h, p["ln2"], cfg.norm_eps)
+    if cfg.moe:
+        y, _ = moe_ffn(p["moe"], hin, cfg.moe, dropless=True)
+    else:
+        y = swiglu(hin, p["mlp"]["wi"], p["mlp"]["wg"], p["mlp"]["wo"])
+    return h + y, cache_k, cache_v
+
+
+def decode_attention_dyn(q, k_cache, v_cache, pos, window):
+    """decode_attention with a traced per-layer window scalar."""
+    b, _, h, hd = q.shape
+    s, kvh = k_cache.shape[1], k_cache.shape[2]
+    n_rep = h // kvh
+    from repro.models.attention import gqa_expand, NEG_INF
+    k = gqa_expand(k_cache, n_rep).astype(jnp.float32)
+    v = gqa_expand(v_cache, n_rep).astype(jnp.float32)
+    qf = q.astype(jnp.float32) * hd ** -0.5
+    scores = jnp.einsum("bqhd,bshd->bhqs", qf, k)
+    idx = jnp.arange(s)
+    valid = idx <= pos
+    valid = jnp.logical_and(
+        valid, jnp.where(window > 0, idx > pos - window, True))
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqs,bshd->bqhd", p, v).astype(q.dtype)
+
+
+def decode_step(params, cfg: ModelConfig, caches, tokens, pos,
+                *, embeddings=None):
+    """One-token decode.  tokens: (B, 1); pos: scalar index of the new token.
+
+    Returns (logits (B, 1, V), new caches).
+    """
+    cdt = dtype_of(cfg.compute_dtype)
+    if embeddings is None:
+        x = params["embed"][tokens].astype(cdt)
+    else:
+        x = embeddings.astype(cdt)
+
+    new_caches = []
+    for seg, sp, cache in zip(layout(cfg), params["segments"], caches):
+        if seg.kind == SHARED_ATTN:
+            def sbody(x, xs):
+                ck, cv = xs
+                y, ck, cv = _decode_attn_layer(params["shared"], x, cfg,
+                                               ck, cv, 0, pos)
+                return y, (ck, cv)
+            x, (ck, cv) = sbody(x, (cache["k"][0], cache["v"][0]))
+            new_caches.append({"k": ck[None], "v": cv[None]})
+            continue
+
+        if seg.kind == ATTN:
+            windows = jnp.asarray(seg.windows, jnp.int32)
+
+            def body(x, xs):
+                p, ck, cv, w = xs
+                y, ck, cv = _decode_attn_layer(p, x, cfg, ck, cv, w, pos)
+                return y, (ck, cv)
+            x, (ck, cv) = jax.lax.scan(
+                body, x, (sp, cache["k"], cache["v"], windows))
+            new_caches.append({"k": ck, "v": cv})
+        elif seg.kind == MAMBA2:
+            def body(x, xs):
+                p, h, conv = xs
+                xin = rms_norm(x, p["ln1"], cfg.norm_eps)
+                y, st = m2.mamba2_decode(p["mamba"], xin, cfg,
+                                         {"h": h, "conv": conv})
+                return x + y, (st["h"], st["conv"])
+            x, (h, conv) = jax.lax.scan(body, x,
+                                        (sp, cache["h"], cache["conv"]))
+            new_caches.append({"h": h, "conv": conv})
+        elif seg.kind == RWKV6:
+            def body(x, xs):
+                p, wkv, sh_t, sh_c = xs
+                xin = rms_norm(x, p["ln1"], cfg.norm_eps)
+                y, new_sh_t, wkv2 = rk.time_mix(
+                    p["rwkv"], xin, cfg, shift_state=sh_t,
+                    wkv_state=wkv, decode=True)
+                h = x + y
+                hin = rms_norm(h, p["ln2"], cfg.norm_eps)
+                y2, new_sh_c = rk.channel_mix(p["rwkv"], hin, cfg,
+                                              shift_state=sh_c)
+                return h + y2, (wkv2, xin[:, -1:], hin[:, -1:])
+            x, (wkv, sh_t, sh_c) = jax.lax.scan(
+                body, x, (sp, cache["wkv"], cache["shift_t"],
+                          cache["shift_c"]))
+            new_caches.append({"wkv": wkv, "shift_t": sh_t, "shift_c": sh_c})
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head", params["embed"])
+    logits = jnp.einsum("bsd,vd->bsv", x, head)
+    return logits, new_caches

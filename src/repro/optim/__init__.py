@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (Optimizer, adamw, make_optimizer,
+                                    sgd_momentum)
+from repro.optim.schedules import (cyclic_stage_lr, staged_lr, warmup_staged)
+
+__all__ = ["Optimizer", "adamw", "sgd_momentum", "make_optimizer",
+           "staged_lr", "warmup_staged", "cyclic_stage_lr"]

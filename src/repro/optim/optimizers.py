@@ -1,0 +1,78 @@
+"""Minimal pytree optimizers (no optax in this environment)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable      # params -> state
+    update: Callable    # (grads, state, params, lr) -> (new_params, new_state)
+
+
+def sgd_momentum(momentum: float = 0.9, weight_decay: float = 0.0,
+                 nesterov: bool = False, state_dtype=None) -> Optimizer:
+    def init(params):
+        return {"v": jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, state_dtype or p.dtype), params)}
+
+    def update(grads, state, params, lr):
+        def upd(g, v, p):
+            g = g.astype(v.dtype)
+            if weight_decay:
+                g = g + weight_decay * p.astype(v.dtype)
+            v_new = momentum * v + g
+            step = (g + momentum * v_new) if nesterov else v_new
+            return (p - lr * step.astype(p.dtype)), v_new
+        flat = jax.tree_util.tree_map(upd, grads, state["v"], params)
+        new_p = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, {"v": new_v}
+
+    return Optimizer(init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, state_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {"m": jax.tree_util.tree_map(zeros, params),
+                "v": jax.tree_util.tree_map(zeros, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(state_dtype)
+            m_new = b1 * m + (1 - b1) * g
+            v_new = b2 * v + (1 - b2) * g * g
+            mhat = m_new / bc1
+            vhat = v_new / bc2
+            step = mhat / (jnp.sqrt(vhat) + eps) \
+                + weight_decay * p.astype(state_dtype)
+            return (p - lr * step.astype(p.dtype)), m_new, v_new
+        flat = jax.tree_util.tree_map(upd, grads, state["m"], state["v"],
+                                      params)
+        pick = lambda i: jax.tree_util.tree_map(
+            lambda t_: t_[i], flat, is_leaf=lambda t_: isinstance(t_, tuple))
+        return pick(0), {"m": pick(1), "v": pick(2), "t": t}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    if name == "sgd":
+        kw.pop("b1", None)
+        return sgd_momentum(**kw)
+    if name == "adamw":
+        kw.pop("momentum", None)
+        return adamw(**kw)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,72 @@
+"""Dual-batch plan solver (Eq. 4-8) — including exact reproduction of the
+paper's Table 2."""
+import math
+
+import pytest
+
+from repro.core.dual_batch import plan_table, solve_plan, update_factor
+from repro.core.time_model import LinearTimeModel
+
+# The paper's GTX1080/TF time model has b/a = 24.57 (fit from Table 2 rows);
+# only the ratio matters for B_S.
+TM = LinearTimeModel(a=1.0, b=24.57)
+
+PAPER_TABLE2 = {
+    1.05: [(83, 10625), (154, 11875), (205, 12291.67), (242, 12500)],
+    1.1: [(38, 8750), (87, 11250), (127, 12083.33), (160, 12500)],
+}
+
+
+@pytest.mark.parametrize("k", [1.05, 1.1])
+def test_table2_reproduction(k):
+    plans = plan_table(TM, B_L=500, d=50000, n_workers=4, k=k)
+    for plan, (bs, ds) in zip(plans, PAPER_TABLE2[k]):
+        assert abs(plan.B_S - bs) <= 1, (plan.n_small, plan.B_S, bs)
+        assert abs(plan.d_S - ds) < 1.0
+
+
+def test_table2_update_factors():
+    # paper Table 2 d_S/d_L column
+    plans = plan_table(TM, B_L=500, d=50000, n_workers=4, k=1.05)
+    expected = [0.810, 0.905, 0.936, 0.952]
+    for plan, f in zip(plans, expected):
+        assert abs(plan.update_factor_small - f) < 2e-3
+
+
+def test_load_balance_eq4_eq5():
+    """Eq. 4/5: both groups take k x the all-large epoch time."""
+    plan = solve_plan(TM, B_L=500, d=50000, n_workers=4, n_small=2, k=1.1)
+    t_large = TM.epoch_time_approx(plan.B_L, plan.d_L)
+    t_small = TM.epoch_time_approx(plan.B_S, plan.d_S)
+    t_ref = 1.1 * TM.epoch_time_approx(500, 50000 / 4)
+    assert abs(t_large - t_ref) / t_ref < 1e-6
+    # B_S is rounded to int, so the small side matches within rounding
+    assert abs(t_small - t_ref) / t_ref < 2e-2
+
+
+def test_data_conservation_eq6():
+    plan = solve_plan(TM, B_L=500, d=50000, n_workers=4, n_small=3, k=1.05)
+    assert abs(plan.n_large * plan.d_L + plan.n_small * plan.d_S
+               - 50000) < 1e-6
+
+
+def test_update_factor_schemes():
+    assert update_factor("ds_over_dl", 8750, 13750) == pytest.approx(0.636,
+                                                                     abs=1e-3)
+    assert update_factor("sqrt", 8750, 13750) == pytest.approx(
+        math.sqrt(8750 / 13750), abs=1e-9)
+    assert update_factor("none", 1, 2) == 1.0
+    with pytest.raises(ValueError):
+        update_factor("bogus", 1, 1)
+
+
+def test_k_too_large_raises():
+    with pytest.raises(ValueError):
+        # k=2 with 1 small worker: large workers claim > all the data
+        solve_plan(TM, B_L=500, d=50000, n_workers=4, n_small=1, k=2.0)
+
+
+def test_all_small_matches_paper_convention():
+    plan = solve_plan(TM, B_L=500, d=50000, n_workers=4, n_small=4, k=1.05)
+    assert plan.d_S == pytest.approx(12500)
+    assert plan.n_large == 0

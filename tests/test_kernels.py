@@ -1,0 +1,146 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode
+(spec mandate)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.dbl_merge import dbl_merge_flat
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mamba_scan import mamba_ssd_scan
+from repro.kernels.wkv6 import wkv6_chunked
+
+RS = np.random.RandomState(0)
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+@pytest.mark.parametrize("b,h,kv,s,hd", [
+    (2, 4, 2, 256, 64), (1, 4, 4, 128, 32), (2, 8, 1, 256, 128),
+    (1, 2, 2, 512, 64),
+])
+@pytest.mark.parametrize("window", [0, 64])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, h, kv, s, hd, window, dtype):
+    q = jnp.asarray(RS.randn(b, h, s, hd), dtype)
+    k = jnp.asarray(RS.randn(b, kv, s, hd), dtype)
+    v = jnp.asarray(RS.randn(b, kv, s, hd), dtype)
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          interpret=True)
+    exp = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(exp, np.float32),
+        atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_flash_attention_noncausal():
+    q = jnp.asarray(RS.randn(1, 2, 128, 64), jnp.float32)
+    k = jnp.asarray(RS.randn(1, 2, 128, 64), jnp.float32)
+    v = jnp.asarray(RS.randn(1, 2, 128, 64), jnp.float32)
+    out = flash_attention(q, k, v, causal=False, interpret=True)
+    exp = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5)
+
+
+@pytest.mark.parametrize("bt,h,s,p,n,chunk", [
+    (2, 3, 256, 64, 16, 64), (1, 2, 128, 32, 64, 128), (2, 1, 192, 64, 32, 48),
+    (1, 4, 64, 128, 8, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mamba_ssd_sweep(bt, h, s, p, n, chunk, dtype):
+    x = jnp.asarray(RS.randn(bt, h, s, p), dtype)
+    dt = jnp.asarray(np.abs(RS.randn(bt, h, s)) * 0.1 + 0.01, jnp.float32)
+    A_log = jnp.asarray(np.log(np.linspace(1, 8, h)), jnp.float32)
+    B = jnp.asarray(RS.randn(bt, s, n) * 0.3, dtype)
+    C = jnp.asarray(RS.randn(bt, s, n) * 0.3, dtype)
+    D = jnp.ones((h,), jnp.float32)
+    out = mamba_ssd_scan(x, dt, A_log, B, C, D, chunk=chunk, interpret=True)
+    expected, _ = ref.ssd_scan_ref(
+        x.transpose(0, 2, 1, 3), dt.transpose(0, 2, 1), A_log, B, C, D)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32),
+        np.asarray(expected.transpose(0, 2, 1, 3), np.float32),
+        atol=5 * _tol(dtype), rtol=5 * _tol(dtype))
+
+
+@pytest.mark.parametrize("b,h,s,kd,vd,chunk", [
+    (2, 2, 128, 32, 32, 32), (1, 3, 96, 64, 64, 48), (1, 1, 64, 128, 64, 64),
+])
+def test_wkv6_sweep(b, h, s, kd, vd, chunk):
+    r = jnp.asarray(RS.randn(b, h, s, kd) * 0.5, jnp.float32)
+    k = jnp.asarray(RS.randn(b, h, s, kd) * 0.5, jnp.float32)
+    v = jnp.asarray(RS.randn(b, h, s, vd) * 0.5, jnp.float32)
+    w = jnp.asarray(1 / (1 + np.exp(-RS.randn(b, h, s, kd))) * 0.5 + 0.5,
+                    jnp.float32)
+    u = jnp.asarray(RS.randn(h, kd) * 0.3, jnp.float32)
+    out = wkv6_chunked(r, k, v, w, u, chunk=chunk, interpret=True)
+    tr = lambda t: t.transpose(0, 2, 1, 3)
+    expected, _ = ref.wkv6_ref(tr(r), tr(k), tr(v), tr(w), u)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(tr(expected)), atol=3e-5,
+                               rtol=3e-5)
+
+
+@pytest.mark.parametrize("n", [100, 4096, 65536 + 17])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dbl_merge_sweep(n, dtype):
+    p = jnp.asarray(RS.randn(n), dtype)
+    gl = jnp.asarray(RS.randn(n) * 0.1, dtype)
+    gs = jnp.asarray(RS.randn(n) * 0.1, dtype)
+    out = dbl_merge_flat(p, gl, gs, factor=0.81, lr=0.05, interpret=True)
+    exp = ref.dbl_merge_ref(p, gl, gs, factor=0.81, lr=0.05)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_model_path_matches_kernel_semantics():
+    """The XLA model path (models.attention.chunked_attention) and the
+    Pallas kernel implement the same math."""
+    from repro.models.attention import chunked_attention
+    b, h, kv, s, hd = 1, 4, 2, 256, 64
+    q = jnp.asarray(RS.randn(b, s, h, hd), jnp.float32)
+    k = jnp.asarray(RS.randn(b, s, kv, hd), jnp.float32)
+    v = jnp.asarray(RS.randn(b, s, kv, hd), jnp.float32)
+    xla = chunked_attention(q, k, v, window=0, block_k=64)
+    pal = flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                          v.transpose(0, 2, 1, 3), interpret=True)
+    np.testing.assert_allclose(np.asarray(xla),
+                               np.asarray(pal.transpose(0, 2, 1, 3)),
+                               atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("b,h,kv,s,hd,pos,win", [
+    (2, 4, 2, 1024, 64, 700, 0), (1, 8, 2, 2048, 128, 2047, 0),
+    (2, 2, 1, 512, 64, 300, 128), (1, 4, 4, 1024, 64, 0, 0),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_sweep(b, h, kv, s, hd, pos, win, dtype):
+    from repro.kernels.flash_decode import flash_decode
+    q = jnp.asarray(RS.randn(b, h, 1, hd), dtype)
+    k = jnp.asarray(RS.randn(b, kv, s, hd), dtype)
+    v = jnp.asarray(RS.randn(b, kv, s, hd), dtype)
+    out = flash_decode(q, k, v, pos, window=win, interpret=True)
+    exp = ref.flash_decode_ref(q, k, v, pos, window=win)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_chunked_cross_entropy_matches_dense():
+    from repro.models.layers import chunked_cross_entropy, cross_entropy
+    rng = np.random.RandomState(0)
+    b, s, d, v = 2, 48, 16, 37
+    hidden = jnp.asarray(rng.randn(b, s, d), jnp.float32)
+    head = jnp.asarray(rng.randn(v, d), jnp.float32)
+    labels = jnp.asarray(rng.randint(0, v, (b, s)), jnp.int32)
+    mask = jnp.asarray(rng.rand(b, s) > 0.3, jnp.float32)
+    dense = cross_entropy(jnp.einsum("bsd,vd->bsv", hidden, head), labels,
+                          label_mask=mask)
+    streamed = chunked_cross_entropy(hidden, head, labels, chunk=16,
+                                     label_mask=mask)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(streamed),
+                               atol=2e-5, rtol=2e-5)

@@ -1,0 +1,73 @@
+"""Cyclic progressive learning schedules (paper §4.1, Tables 6/7/9)."""
+import pytest
+
+from repro.core.hybrid import hybrid_schedule, predicted_total_time
+from repro.core.progressive import adapt_batch, cyclic_schedule, total_cost
+from repro.core.time_model import LinearTimeModel
+
+
+def test_paper_table7_structure():
+    """CIFAR: stages (80,40,20) x sub-resolutions (24,32) -> 6 sub-stages
+    with epochs 40/40/20/20/10/10, every resolution under every LR."""
+    plans = cyclic_schedule(stages=(80, 40, 20), stage_lrs=(0.2, 0.02, 0.002),
+                            sub_sizes=(24, 32), sub_dropouts=(0.1, 0.2),
+                            B_ref=560)
+    assert [p.epochs for p in plans] == [40, 40, 20, 20, 10, 10]
+    assert [p.input_size for p in plans] == [24, 32] * 3
+    assert [p.lr for p in plans] == [0.2, 0.2, 0.02, 0.02, 0.002, 0.002]
+    assert [p.dropout for p in plans] == [0.1, 0.2] * 3
+    # batch adapts with r^2: B(24) = 560*(32/24)^2 = 995
+    assert plans[0].batch_size == adapt_batch(560, 32, 24)
+    assert plans[1].batch_size == 560
+
+
+def test_adapt_batch_resolution_and_seq():
+    assert adapt_batch(560, 32, 24) == int(560 * (32 / 24) ** 2)
+    assert adapt_batch(740, 288, 160) == int(740 * (288 / 160) ** 2)
+    # sequence axis is linear
+    assert adapt_batch(256, 4096, 2048, axis="seq_len") == 512
+
+
+def test_cost_reduction_matches_paper_ratio():
+    """Paper §5.2.3: size ratio 0.56 on CIFAR (24^2/32^2) drives the
+    hybrid time saving; CPL cost < constant-resolution cost."""
+    cpl = cyclic_schedule(stages=(80, 40, 20), stage_lrs=(0.2, 0.02, 0.002),
+                          sub_sizes=(24, 32), sub_dropouts=(0.1, 0.2),
+                          B_ref=560)
+    base = cyclic_schedule(stages=(80, 40, 20), stage_lrs=(0.2, 0.02, 0.002),
+                           sub_sizes=(32,), sub_dropouts=(0.2,), B_ref=560)
+    c_cpl = total_cost(cpl, dataset_size=50000)
+    c_base = total_cost(base, dataset_size=50000)
+    expected = (0.5625 + 1) / 2        # half the epochs at r=24
+    assert c_cpl / c_base == pytest.approx(expected, rel=1e-6)
+
+
+def test_hybrid_schedule_composition():
+    tm = LinearTimeModel(a=1.0, b=24.57)
+    phases = hybrid_schedule(tm, stages=(80, 40, 20),
+                             stage_lrs=(0.2, 0.02, 0.002),
+                             sub_sizes=(24, 32), sub_dropouts=(0.1, 0.2),
+                             B_L_ref=560, dataset_size=50000, n_workers=4,
+                             n_small=3, k=1.05)
+    assert len(phases) == 6
+    for ph in phases:
+        # every sub-stage has a consistent dual-batch plan
+        assert ph.dbl.B_S < ph.dbl.B_L
+        assert ph.dbl.n_small == 3
+        assert ph.dbl.B_L == ph.sub.batch_size
+    # hybrid schedule is faster than pure-DBL at the largest size
+    t_hybrid = predicted_total_time(phases, tm)
+    from repro.core.dual_batch import solve_plan
+    dbl = solve_plan(tm, B_L=560, d=50000, n_workers=4, n_small=3, k=1.05)
+    t_dbl = 140 * dbl.predicted_epoch_time(tm)
+    assert t_hybrid < t_dbl
+
+
+def test_imagenet_batch_ratios_table6():
+    """Table 6: B_L = (2330, 1110, 740) at resolutions (160, 224, 288) —
+    memory-proportional adaptation reproduces the ratios within ~11%
+    (the paper's profiler also accounts a resolution-independent fixed
+    term, which our pure r^2 rule omits)."""
+    for b, r in [(2330, 160), (1110, 224)]:
+        pred = adapt_batch(740, 288, r)
+        assert abs(pred - b) / b < 0.11

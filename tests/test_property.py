@@ -1,0 +1,118 @@
+"""Hypothesis property tests on system invariants."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dual_batch import solve_plan
+from repro.core.progressive import adapt_batch, cyclic_schedule
+from repro.core.time_model import LinearTimeModel, MemoryModel
+from repro.launch.hlo_analysis import _shape_bytes
+
+
+@settings(max_examples=60, deadline=None)
+@given(a=st.floats(0.001, 1.0), b_over_a=st.floats(1.0, 100.0),
+       k=st.floats(1.01, 1.2), n_small=st.integers(1, 3),
+       B_L=st.integers(64, 2048))
+def test_plan_load_balance_invariant(a, b_over_a, k, n_small, B_L):
+    """For ANY valid time model: both groups' epoch times equal k x the
+    all-large time (the straggler-free property the SPMD form relies on)."""
+    tm = LinearTimeModel(a=a, b=a * b_over_a)
+    d, n = 50000, 4
+    try:
+        plan = solve_plan(tm, B_L=B_L, d=d, n_workers=n, n_small=n_small,
+                          k=k)
+    except ValueError:
+        return      # solver correctly rejects infeasible configs
+    t_ref = k * tm.epoch_time_approx(B_L, d / n)
+    t_large = tm.epoch_time_approx(plan.B_L, plan.d_L)
+    assert abs(t_large - t_ref) / t_ref < 1e-9
+    # small side: exact before integer rounding of B_S
+    denom = (tm.a + tm.b / B_L) * (plan.d_L / plan.d_S) - tm.a
+    B_S_exact = tm.b / denom
+    t_small = tm.epoch_time_approx(B_S_exact, plan.d_S)
+    assert abs(t_small - t_ref) / t_ref < 1e-9
+    # invariants
+    assert 0 < plan.B_S <= plan.B_L + 1
+    assert plan.d_S <= plan.d_L + 1e-9
+    assert 0 < plan.update_factor_small <= 1.0
+
+
+@settings(max_examples=40, deadline=None)
+@given(stages=st.lists(st.integers(2, 50), min_size=1, max_size=4),
+       n_sub=st.integers(1, 4))
+def test_cyclic_schedule_conserves_epochs(stages, n_sub):
+    sizes = tuple(8 * (i + 1) for i in range(n_sub))
+    lrs = tuple(0.1 / (10 ** i) for i in range(len(stages)))
+    plans = cyclic_schedule(stages=tuple(stages), stage_lrs=lrs,
+                            sub_sizes=sizes,
+                            sub_dropouts=tuple(0.1 for _ in sizes),
+                            B_ref=512)
+    assert sum(p.epochs for p in plans) == sum(stages)
+    # monotone: larger input -> smaller-or-equal batch
+    for p in plans:
+        assert p.batch_size == adapt_batch(512, max(sizes), p.input_size)
+
+
+@settings(max_examples=40, deadline=None)
+@given(ref=st.integers(32, 512), size=st.integers(16, 512),
+       B=st.integers(8, 4096))
+def test_adapt_batch_memory_conservation(ref, size, B):
+    """B(r)·r^2 <= B_ref·ref^2 (never exceeds the memory budget)."""
+    out = adapt_batch(B, ref, size)
+    assert out * size * size <= B * ref * ref + size * size   # int floor slack
+    out_seq = adapt_batch(B, ref, size, axis="seq_len")
+    assert out_seq * size <= B * ref + size
+
+
+@settings(max_examples=30, deadline=None)
+@given(fixed=st.floats(0, 1e10), per=st.floats(1e3, 1e8),
+       budget=st.floats(1e9, 1e12))
+def test_memory_model_max_batch_within_budget(fixed, per, budget):
+    mm = MemoryModel(fixed=fixed, per_sample=per)
+    b = mm.max_batch(budget)
+    if b > 1:
+        assert mm.usage(b) <= budget + per
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(1, 64), min_size=0, max_size=4),
+       st.sampled_from(["f32", "bf16", "s32", "u8", "pred"]))
+def test_hlo_shape_bytes_parser(dims, dtype):
+    nbytes = {"f32": 4, "bf16": 2, "s32": 4, "u8": 1, "pred": 1}[dtype]
+    s = f"{dtype}[{','.join(map(str, dims))}]"
+    expected = nbytes * int(np.prod(dims)) if dims else nbytes
+    assert _shape_bytes(s) == expected
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 4), s=st.integers(2, 16), v=st.integers(3, 30))
+def test_cross_entropy_matches_manual(b, s, v):
+    from repro.models.layers import cross_entropy
+    rng = np.random.RandomState(b * 100 + s)
+    logits = jnp.asarray(rng.randn(b, s, v), jnp.float32)
+    labels = jnp.asarray(rng.randint(0, v, (b, s)), jnp.int32)
+    got = cross_entropy(logits, labels)
+    probs = jax.nn.log_softmax(logits, axis=-1)
+    exp = -jnp.mean(jnp.take_along_axis(probs, labels[..., None],
+                                        axis=-1)[..., 0], axis=-1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(4, 200), factor=st.floats(0.1, 1.0),
+       lr=st.floats(1e-4, 0.5))
+def test_dbl_merge_is_weighted_mean_update(n, factor, lr):
+    """The fused merge equals SGD on the factor-weighted mean gradient."""
+    from repro.kernels.ref import dbl_merge_ref
+    rng = np.random.RandomState(n)
+    p = jnp.asarray(rng.randn(n), jnp.float32)
+    gl = jnp.asarray(rng.randn(n), jnp.float32)
+    gs = jnp.asarray(rng.randn(n), jnp.float32)
+    out = dbl_merge_ref(p, gl, gs, factor=factor, lr=lr)
+    manual = p - lr * (1.0 * gl + factor * gs) / (1.0 + factor)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(manual),
+                               atol=1e-5)

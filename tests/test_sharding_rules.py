@@ -1,0 +1,69 @@
+"""Divisibility-aware sharding rules (launch/sharding.py)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.sharding import batch_spec, spec_for
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH_POD = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_col_row_parallel_orientation():
+    assert spec_for(("segments", "attn", "wq"), (64, 4096, 4096), MESH) \
+        == P(None, "data", "model")
+    assert spec_for(("segments", "attn", "wo"), (64, 4096, 4096), MESH) \
+        == P(None, "model", "data")
+    assert spec_for(("segments", "mlp", "wi"), (32, 4096, 14336), MESH) \
+        == P(None, "data", "model")
+
+
+def test_vocab_major_embeddings():
+    assert spec_for(("embed",), (128256, 16384), MESH) == P("model", "data")
+    # non-divisible vocab falls back (granite 49155, seamless 256206)
+    assert spec_for(("lm_head",), (49155, 1536), MESH) == P(None, "data")
+
+
+def test_moe_expert_parallel_or_ff_fallback():
+    # arctic: 128 experts divide 16 -> expert-parallel
+    assert spec_for(("segments", "moe", "wi"), (35, 128, 7168, 4864), MESH) \
+        == P(None, "model", "data", None)
+    # granite: 40 experts don't divide -> shard d_ff instead
+    assert spec_for(("segments", "moe", "wi"), (32, 40, 1536, 512), MESH) \
+        == P(None, None, "data", "model")
+    assert spec_for(("segments", "moe", "wo"), (32, 40, 512, 1536), MESH) \
+        == P(None, None, "model", "data")
+
+
+def test_non_divisible_dims_drop_to_none():
+    # gemma3 q-proj: 2560x2048, both divisible -> sharded; 8 heads is the
+    # activation-side problem, weights still shard on the fused dim
+    assert spec_for(("segments", "attn", "wq"), (34, 2560, 2048), MESH) \
+        == P(None, "data", "model")
+    # odd dims replicate
+    assert spec_for(("segments", "attn", "wq"), (2, 30, 50), MESH) \
+        == P(None, None, None)
+
+
+def test_norms_and_small_params_replicated():
+    assert spec_for(("segments", "ln1"), (32, 4096), MESH) == P(None, None)
+    assert spec_for(("final_norm",), (4096,), MESH) == P(None)
+    assert spec_for(("segments", "moe", "router"), (32, 4096, 128), MESH) \
+        == P(None, None, None)
+
+
+def test_batch_spec_pod_axes():
+    assert batch_spec((256, 4096), MESH) == P(("data",), None)
+    assert batch_spec((256, 4096), MESH_POD) == P(("pod", "data"), None)
+    # B=1 long-context: unshardable batch stays None
+    assert batch_spec((1, 1), MESH) == P(None, None)
+    # batch 32 on pod mesh: divisible by pod*data=32
+    assert batch_spec((32, 128), MESH_POD) == P(("pod", "data"), None)

@@ -1,0 +1,109 @@
+"""Optimizers, schedules, data pipeline, checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.core.dual_batch import solve_plan
+from repro.core.time_model import LinearTimeModel
+from repro.data import (SyntheticImages, SyntheticTokens,
+                        allocate_worker_indices, epoch_global_batches,
+                        worker_batches)
+from repro.optim import adamw, make_optimizer, sgd_momentum, staged_lr, warmup_staged
+
+
+def test_sgd_momentum_quadratic():
+    opt = sgd_momentum(momentum=0.9)
+    params = {"x": jnp.asarray([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(250):
+        grads = {"x": 2 * params["x"]}
+        params, state = opt.update(grads, state, params, 0.05)
+    assert float(jnp.max(jnp.abs(params["x"]))) < 1e-3
+
+
+def test_adamw_quadratic():
+    opt = adamw(weight_decay=0.0)
+    params = {"x": jnp.asarray([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(300):
+        grads = {"x": 2 * params["x"]}
+        params, state = opt.update(grads, state, params, 0.05)
+    assert float(jnp.max(jnp.abs(params["x"]))) < 1e-2
+    assert int(state["t"]) == 300
+
+
+def test_schedules():
+    lr = staged_lr([80, 40, 20], [0.2, 0.02, 0.002])
+    assert lr(0) == 0.2 and lr(79) == 0.2
+    assert lr(80) == 0.02 and lr(119) == 0.02
+    assert lr(120) == 0.002 and lr(500) == 0.002
+    wlr = warmup_staged([80, 40, 20], [0.2, 0.02, 0.002], warmup_epochs=5)
+    assert wlr(0) == pytest.approx(0.2 / 5 + (0.2 - 0.04) / 5)
+    assert wlr(4) == pytest.approx(0.2)
+    assert wlr(100) == 0.02
+
+
+def test_synthetic_images_resolutions_and_determinism():
+    d1 = SyntheticImages(n_train=64, n_test=16, seed=3)
+    d2 = SyntheticImages(n_train=64, n_test=16, seed=3)
+    b1 = d1.train_batch(np.arange(8), 24)
+    b2 = d2.train_batch(np.arange(8), 24)
+    np.testing.assert_array_equal(b1["images"], b2["images"])
+    assert b1["images"].shape == (8, 24, 24, 3)
+    assert d1.test_set(32)["images"].shape == (16, 32, 32, 3)
+
+
+def test_synthetic_tokens_learnable_structure():
+    data = SyntheticTokens(vocab=32, num_classes=4, seed=0)
+    rng = np.random.RandomState(0)
+    b = data.batch(rng, 4, 64)
+    assert b["tokens"].shape == (4, 64)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_worker_allocation_matches_plan():
+    tm = LinearTimeModel(a=1.0, b=24.57)
+    plan = solve_plan(tm, B_L=500, d=50000, n_workers=4, n_small=3, k=1.05)
+    allocs = allocate_worker_indices(plan, 50000, epoch=0)
+    assert len(allocs) == 4
+    assert sum(len(a) for a in allocs) == 50000
+    assert abs(len(allocs[0]) - plan.d_L) <= 4
+    # no duplicate sample across workers within an epoch
+    all_idx = np.concatenate(allocs)
+    assert len(np.unique(all_idx)) == 50000
+    # batch count follows Eq. 2's ceil
+    nb = len(list(worker_batches(allocs[0], 500)))
+    assert nb == int(np.ceil(len(allocs[0]) / 500))
+
+
+def test_epoch_global_batches():
+    batches = list(epoch_global_batches(1000, 256, epoch=1))
+    assert len(batches) == 3
+    assert all(len(b) == 256 for b in batches)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.bfloat16)},
+            "lst": [jnp.zeros((2,)), jnp.asarray(3.0)]}
+    path = str(tmp_path / "ckpt")
+    save_checkpoint(path, 7, tree)
+    assert latest_step(path) == 7
+    restored = load_checkpoint(path, 7, tree)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    tree = {"a": jnp.ones((2, 2))}
+    path = str(tmp_path / "ckpt")
+    save_checkpoint(path, 1, tree)
+    with pytest.raises(ValueError):
+        load_checkpoint(path, 1, {"a": jnp.ones((3, 3))})

