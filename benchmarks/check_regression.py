@@ -1,0 +1,139 @@
+"""Benchmark regression gate.
+
+Compares a fresh ``benchmarks.run`` CSV against the latest ``BENCH_*.json``
+baseline in the repo root and exits non-zero when any hot-path timing row
+regresses by more than ``--threshold`` (default 20%).  Wired as an optional
+CI step; also seeds the bench trajectory:
+
+  PYTHONPATH=src python -m benchmarks.run --only table4 > bench.csv
+  PYTHONPATH=src python -m benchmarks.check_regression --csv bench.csv \\
+      --write-baseline            # first run: seed BENCH_<date>.json
+  PYTHONPATH=src python -m benchmarks.check_regression --csv bench.csv
+      # later runs: exit 1 on >20% regression of any compared row
+
+Comparison rules:
+  * only timing rows are gated: name ends with ``_us`` or ``us_per_call``-
+    style numeric rows whose name does NOT end with ``bench_wall_s`` and
+    whose value exceeds ``--min-us`` (noise floor; default 100us);
+  * ratio/accuracy/derived rows and rows missing from either side are
+    reported but never fail the gate (benches evolve);
+  * no baseline found -> exit 0 with a note (first-PR bootstrap).
+"""
+from __future__ import annotations
+
+import argparse
+import datetime
+import glob
+import json
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def parse_csv(path: str) -> dict:
+    """``name,us_per_call,derived`` rows -> {name: us_per_call(float)}."""
+    out = {}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line or line.startswith("name,"):
+                continue
+            parts = line.split(",")
+            if len(parts) < 2:
+                continue
+            try:
+                out[parts[0]] = float(parts[1])
+            except ValueError:
+                continue
+    return out
+
+
+def latest_baseline(baseline_dir: str):
+    paths = sorted(glob.glob(os.path.join(baseline_dir, "BENCH_*.json")))
+    if not paths:
+        return None, None
+    path = paths[-1]
+    with open(path) as f:
+        return path, json.load(f)
+
+
+def is_gated(name: str, us: float, min_us: float) -> bool:
+    """Gate only genuine wall-timing rows: ``*_us`` names above the noise
+    floor.  Ratios, accuracies, predicted times and wall_s totals are
+    reported but never fail the build."""
+    return name.endswith("_us") and us >= min_us
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--csv", required=True,
+                    help="fresh benchmarks.run CSV to check")
+    ap.add_argument("--baseline-dir", default=REPO_ROOT)
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="max allowed relative slowdown (0.20 = +20%%)")
+    ap.add_argument("--min-us", type=float, default=100.0,
+                    help="ignore rows faster than this (noise floor)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write BENCH_<date>.json from the CSV and exit 0")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.csv):
+        print(f"check_regression: CSV not found: {args.csv}",
+              file=sys.stderr)
+        return 2
+    fresh = parse_csv(args.csv)
+    if not fresh:
+        print(f"check_regression: no parsable rows in {args.csv}",
+              file=sys.stderr)
+        return 2
+
+    if args.write_baseline:
+        stamp = datetime.date.today().isoformat()
+        path = os.path.join(args.baseline_dir, f"BENCH_{stamp}.json")
+        payload = {"date": stamp, "source_csv": os.path.basename(args.csv),
+                   "rows": fresh}
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        print(f"check_regression: baseline written -> {path} "
+              f"({len(fresh)} rows)")
+        return 0
+
+    path, baseline = latest_baseline(args.baseline_dir)
+    if baseline is None:
+        print("check_regression: no BENCH_*.json baseline found — "
+              "nothing to compare (run with --write-baseline to seed). OK")
+        return 0
+    base_rows = baseline.get("rows", baseline)
+
+    failures, notes = [], []
+    for name, us in sorted(fresh.items()):
+        if name not in base_rows:
+            notes.append(f"  new row (not gated): {name}={us}")
+            continue
+        base = base_rows[name]
+        if not is_gated(name, max(us, base), args.min_us):
+            continue
+        if base <= 0:
+            continue
+        rel = (us - base) / base
+        flag = "REGRESSION" if rel > args.threshold else "ok"
+        print(f"  {flag:<10} {name}: {base:.1f} -> {us:.1f} us "
+              f"({rel * 100:+.1f}%)")
+        if rel > args.threshold:
+            failures.append(name)
+    for name in sorted(set(base_rows) - set(fresh)):
+        notes.append(f"  missing vs baseline (not gated): {name}")
+    for n in notes:
+        print(n)
+
+    if failures:
+        print(f"check_regression: {len(failures)} hot-path row(s) regressed "
+              f">{args.threshold * 100:.0f}% vs {path}", file=sys.stderr)
+        return 1
+    print(f"check_regression: OK vs {os.path.basename(path or '-')}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

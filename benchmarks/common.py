@@ -8,7 +8,6 @@ time model.
 """
 from __future__ import annotations
 
-import functools
 import time
 from dataclasses import replace
 

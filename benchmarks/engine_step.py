@@ -1,0 +1,103 @@
+"""Engine-step microbenchmark: fused ``dbl_merge`` server update vs the
+unfused scale/add/normalize/apply HLO sequence, plus the full engine step
+on both paths.
+
+The fused Pallas kernel exists to remove three HBM round-trips of
+parameter-sized temporaries; on TPU it runs compiled, in this container it
+runs in interpret mode (so the CPU numbers measure dispatch semantics, not
+the TPU win — the unfused path is the HLO XLA actually fuses on CPU).
+
+  PYTHONPATH=src python -m benchmarks.engine_step
+  PYTHONPATH=src python -m benchmarks.run --only engine
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timeit
+
+
+def _param_tree(n_leaves: int, leaf: int, seed: int = 0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3 * n_leaves)
+    mk = lambda i: jax.random.normal(ks[i], (leaf,), jnp.float32)
+    p = {f"w{i}": mk(3 * i) for i in range(n_leaves)}
+    gl = {f"w{i}": mk(3 * i + 1) for i in range(n_leaves)}
+    gs = {f"w{i}": mk(3 * i + 2) for i in range(n_leaves)}
+    return p, gl, gs
+
+
+def bench_merge(*, n_leaves: int = 8, leaf: int = 1 << 16,
+                factor: float = 0.9, lr: float = 0.01, repeats: int = 5):
+    """Microseconds per fused / unfused merge over an ``n_leaves``-leaf
+    parameter tree of flat ``leaf``-sized f32 arrays."""
+    from repro.kernels.dbl_merge import dbl_merge_tree
+    from repro.kernels.ref import dbl_merge_ref
+
+    p, gl, gs = _param_tree(n_leaves, leaf)
+    interpret = jax.default_backend() != "tpu"
+
+    fused = jax.jit(lambda p, gl, gs: dbl_merge_tree(
+        p, gl, gs, factor=factor, lr=lr, interpret=interpret))
+    unfused = jax.jit(lambda p, gl, gs: jax.tree_util.tree_map(
+        lambda a, b, c: dbl_merge_ref(a, b, c, factor=factor, lr=lr),
+        p, gl, gs))
+
+    block = lambda f: (lambda *a: jax.block_until_ready(f(*a)))
+    t_fused = timeit(block(fused), p, gl, gs, repeats=repeats)
+    t_unfused = timeit(block(unfused), p, gl, gs, repeats=repeats)
+    return t_fused * 1e6, t_unfused * 1e6
+
+
+def bench_engine_step(*, steps: int = 3):
+    """Wall microseconds per full engine step, fused vs unfused server
+    update, on a tiny LM (same model both paths; dispatch-dominated on CPU)."""
+    from repro import models
+    from repro.configs import get_config, reduced
+    from repro.core.spmd_dual_batch import SpmdDualBatch
+    from repro.engine.steps import make_fused_dbl_step
+    from repro.optim import sgd_momentum
+
+    cfg = reduced(get_config("phi3-mini-3.8b"), layers=1, d_model=64,
+                  n_heads=2, vocab=64)
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0,
+                             cfg.vocab_size)
+    batch = {"tokens": tok, "labels": tok}
+    layout = SpmdDualBatch(global_batch=8, n_workers=4, n_small=2,
+                           small_valid=1, factor_small=0.8)
+    opt = sgd_momentum(0.0)
+    s0 = opt.init(params)
+    out = {}
+    for name, fused in (("fused", True), ("unfused", False)):
+        step = jax.jit(make_fused_dbl_step(cfg, layout, fused=fused),
+                       static_argnums=(3,))
+
+        def run_once(*_):
+            jax.block_until_ready(step(params, s0, batch, 0.01, None))
+        out[name] = timeit(run_once, repeats=steps) * 1e6
+    return out
+
+
+def run(quick: bool = True):
+    rows = []
+    leaf = 1 << 14 if quick else 1 << 18
+    t_f, t_u = bench_merge(leaf=leaf, repeats=3 if quick else 10)
+    rows.append(("engine/dbl_merge_fused_us", round(t_f, 1),
+                 f"leaf={leaf} interpret={jax.default_backend() != 'tpu'}"))
+    rows.append(("engine/dbl_merge_unfused_us", round(t_u, 1),
+                 "naive scale/add/apply HLO"))
+    rows.append(("engine/dbl_merge_speedup", round(t_u / t_f, 3),
+                 "unfused_us / fused_us (>1 means fused wins)"))
+    es = bench_engine_step(steps=2 if quick else 5)
+    rows.append(("engine/step_fused_us", round(es["fused"], 1),
+                 "full SGD dual-batch step, fused server update"))
+    rows.append(("engine/step_unfused_us", round(es["unfused"], 1),
+                 "full SGD dual-batch step, unfused update"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for r in run(quick=True):
+        print(",".join(str(x) for x in r))

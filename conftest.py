@@ -1,0 +1,12 @@
+"""Root conftest: make ``repro`` importable from a plain checkout.
+
+``pip install -e .`` (pyproject.toml) is the packaged route; this keeps
+``python -m pytest`` working without it — including containers where pip
+cannot reach an index — by putting ``src/`` on sys.path.
+"""
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

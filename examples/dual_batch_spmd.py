@@ -3,21 +3,21 @@ import sys
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-"""Deployable SPMD dual-batch step on an 8-device host mesh (DESIGN.md §4):
-the paper's contribution-scaled merge as one weighted all-reduce, plus the
-fused dbl_merge Pallas kernel applying the §3.4 server update.
+"""Deployable SPMD dual-batch training on an 8-device host mesh — a thin
+front-end over ``repro.engine``: the paper's contribution-scaled merge as one
+weighted all-reduce (engine weighted path, params/opt/batch sharded from
+launch.sharding), plus the fused dbl_merge Pallas kernel applying the §3.4
+server update.
 
   python examples/dual_batch_spmd.py            (sets its own XLA_FLAGS)
 """
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding
 
 from repro import models
 from repro.configs import get_config, reduced
-from repro.core import LinearTimeModel, layout_from_plan, solve_plan
-from repro.launch.sharding import batch_specs, param_specs
-from repro.launch.steps import make_train_step
+from repro.core import LinearTimeModel, solve_plan
+from repro.engine import TrainEngine, single_phase
 from repro.optim import sgd_momentum
 
 mesh = jax.make_mesh((4, 2), ("data", "model"))
@@ -26,26 +26,26 @@ params = models.init_params(cfg, jax.random.PRNGKey(0))
 
 tm = LinearTimeModel(a=1.0, b=24.57)
 plan = solve_plan(tm, B_L=64, d=4096, n_workers=4, n_small=3, k=1.05)
-layout = layout_from_plan(plan, 16)
+phases = single_phase(input_size=64, n_steps=10, lr=0.01, batch_size=16,
+                      plan=plan)
+layout = phases[0].layout
 print(f"plan: B_S={plan.B_S} factor={plan.update_factor_small:.3f}; "
       f"SPMD weights = {layout.weights()}")
 
 opt = sgd_momentum(0.9)
-state = opt.init(params)
-step = make_train_step(cfg, opt)
-pspecs, _ = param_specs(params, mesh), None
-sh = lambda s: jax.tree_util.tree_map(lambda x: NamedSharding(mesh, x), s)
+engine = TrainEngine(cfg, opt, mesh=mesh)
 
 tok = jax.random.randint(jax.random.PRNGKey(1), (16, 64), 0, cfg.vocab_size)
-batch = {"tokens": tok, "labels": tok, "weight": layout.weights()}
-with mesh:
-    jstep = jax.jit(step, in_shardings=(sh(pspecs), sh({"v": pspecs}),
-                                        sh(batch_specs(batch, mesh)), None),
-                    out_shardings=(sh(pspecs), sh({"v": pspecs}), None))
-    for i in range(10):
-        params, state, loss = jstep(params, state, batch, 0.01)
-        if i % 3 == 0:
-            print(f"step {i}: loss {float(loss):.4f}")
+
+
+def batch_fn(phase, gstep):
+    return {"tokens": tok, "labels": tok}
+
+
+params, state, hist = engine.run(phases, params, opt.init(params), batch_fn,
+                                 log_every=3)
+for h in hist:
+    print(f"step {h['step']}: loss {h['loss']:.4f}")
 
 # The fused Pallas server-update kernel (paper Eq. update, one VMEM pass):
 from repro.kernels.ops import dbl_merge

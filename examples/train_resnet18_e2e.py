@@ -1,13 +1,13 @@
 """End-to-end driver (paper-faithful): ResNet-18 (full width, ~11M params)
-trained with baseline / dual-batch / hybrid schemes on the event-driven
-parameter-server simulator with synthetic CIFAR-like data — a few hundred
-real gradient steps per scheme, reporting accuracy AND simulated wall-clock
-(the paper's two evaluation axes).
+trained with baseline / dual-batch / hybrid schemes — a thin front-end over
+``repro.engine``: each scheme is a phase schedule (hybrid comes straight
+from ``hybrid_schedule``) executed on the event-driven parameter-server
+simulator with synthetic CIFAR-like data, reporting accuracy AND simulated
+wall-clock (the paper's two evaluation axes).
 
   PYTHONPATH=src python examples/train_resnet18_e2e.py [--quick]
 """
 import argparse
-import time
 from dataclasses import replace
 
 import jax
@@ -16,10 +16,9 @@ import numpy as np
 
 from repro import models
 from repro.configs import get_config
-from repro.core import (LinearTimeModel, adapt_batch, simulate, solve_plan,
-                        workers_from_plan)
+from repro.core import LinearTimeModel, hybrid_schedule, solve_plan
 from repro.data import SyntheticImages
-from repro.optim import staged_lr
+from repro.engine import phases_from_hybrid, run_sim, single_phase
 
 
 def main():
@@ -42,7 +41,7 @@ def main():
     tm = LinearTimeModel(a=0.001, b=0.0246)
     B_L, d, n = 64, 2048, 4
 
-    def fns(resolution):
+    def fns_factory(resolution):
         @jax.jit
         def grad_fn(p, batch):
             return jax.grad(lambda pp: models.loss_fn(pp, cfg, batch)[0])(p)
@@ -61,47 +60,44 @@ def main():
                     "test_acc": round(float(m["accuracy"]), 3)}
         return grad_fn, data_fn, eval_fn
 
+    def init():
+        return models.init_params(cfg, jax.random.PRNGKey(0))
+
     results = {}
 
-    # --- baseline: all-large BSP ---
-    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    # --- baseline: all-large BSP (two LR stages) -------------------------
     plan0 = solve_plan(tm, B_L=B_L, d=d, n_workers=n, n_small=0, k=1.0)
-    g, dfn, ev = fns(32)
-    res = simulate(params, g, dfn, workers_from_plan(plan0, tm),
-                   epochs=epochs, lr_for_epoch=staged_lr(
-                       [epochs * 3 // 4, epochs], [0.05, 0.01]),
-                   sync="bsp", eval_fn=ev)
-    results["baseline"] = (res.history[-1], res.sim_time)
+    phases = single_phase(input_size=32, n_steps=0, lr=0.05,
+                          batch_size=B_L, plan=plan0,
+                          epochs=epochs * 3 // 4) \
+        + single_phase(input_size=32, n_steps=0, lr=0.01, batch_size=B_L,
+                       plan=plan0, epochs=epochs - epochs * 3 // 4)
+    _, t, last = run_sim(phases, init(), fns_factory, tm=tm, sync="bsp")
+    results["baseline"] = (last, t)
 
-    # --- dual-batch learning (ASP, 3 small workers, k=1.05) ---
-    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    # --- dual-batch learning (ASP, 3 small workers, k=1.05) --------------
     plan = solve_plan(tm, B_L=B_L, d=d, n_workers=n, n_small=3, k=1.05)
-    res = simulate(params, g, dfn, workers_from_plan(plan, tm),
-                   epochs=epochs, lr_for_epoch=staged_lr(
-                       [epochs * 3 // 4, epochs], [0.05, 0.01]),
-                   sync="asp", eval_fn=ev)
-    results["dual-batch"] = (res.history[-1], res.sim_time)
+    phases = single_phase(input_size=32, n_steps=0, lr=0.05,
+                          batch_size=B_L, plan=plan,
+                          epochs=epochs * 3 // 4) \
+        + single_phase(input_size=32, n_steps=0, lr=0.01, batch_size=B_L,
+                       plan=plan, epochs=epochs - epochs * 3 // 4)
+    _, t, last = run_sim(phases, init(), fns_factory, tm=tm, sync="asp")
+    results["dual-batch"] = (last, t)
 
-    # --- hybrid: CPL sub-stages 24 -> 32 under each LR stage ---
-    params = models.init_params(cfg, jax.random.PRNGKey(0))
-    sim_time = 0.0
-    last = {}
-    for lr in (0.05, 0.01):
-        for r in (24, 32):
-            scale = (r / 32) ** 2
-            tm_r = LinearTimeModel(a=tm.a * scale, b=tm.b)
-            plan_r = solve_plan(tm_r, B_L=adapt_batch(B_L, 32, r), d=d,
-                                n_workers=n, n_small=3, k=1.05)
-            g, dfn, ev = fns(r)
-            res = simulate(params, g, dfn, workers_from_plan(plan_r, tm_r),
-                           epochs=max(1, epochs // 4),
-                           lr_for_epoch=lambda e: lr, sync="asp",
-                           eval_fn=ev)
-            params, sim_time = res.params, sim_time + res.sim_time
-            last = res.history[-1]
-    g, dfn, ev = fns(32)
-    last.update(ev(params))
-    results["hybrid"] = (last, sim_time)
+    # --- hybrid: CPL sub-stages 24 -> 32 under each LR stage -------------
+    hp = hybrid_schedule(tm, stages=(epochs // 2, epochs // 2),
+                         stage_lrs=(0.05, 0.01), sub_sizes=(24, 32),
+                         sub_dropouts=(0.0, 0.0), B_L_ref=B_L,
+                         dataset_size=d, n_workers=n, n_small=3, k=1.05,
+                         axis="resolution")
+    phases = phases_from_hybrid(hp, total_steps=0, global_batch=B_L,
+                                axis="resolution")
+    params, t, last = run_sim(phases, init(), fns_factory, tm=tm,
+                              sync="asp", axis="resolution")
+    _, _, eval_fn = fns_factory(32)
+    last = {**last, **eval_fn(params)}
+    results["hybrid"] = (last, t)
 
     print(f"\n{'scheme':<12} {'test_acc':>8} {'test_loss':>9} "
           f"{'sim_time_s':>10}")

@@ -17,14 +17,11 @@ steps inside one global step (lax.scan) before the factor-weighted merge.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
-from repro import models
 from repro.core.dual_batch import DualBatchPlan
 from repro.optim import Optimizer
 
@@ -86,79 +83,23 @@ def layout_from_plan(plan: DualBatchPlan, global_batch: int) -> SpmdDualBatch:
 def make_train_step(cfg, optimizer: Optimizer, *,
                     layout: Optional[SpmdDualBatch] = None,
                     drop_rate: float = 0.0):
-    """Build the jit-able train step.
+    """Build the jit-able train step (canonical implementation:
+    ``repro.engine.steps.make_weighted_step``).
 
     step(params, opt_state, batch, lr, rng) -> (params, opt_state, metrics)
     batch: {"tokens","labels"[,...]} — weights are attached from `layout`
     (or taken from batch["weight"] when given explicitly).
     """
-    def step(params, opt_state, batch, lr, rng):
-        if layout is not None and "weight" not in batch:
-            w = layout.weights().astype(jnp.float32)
-            batch = dict(batch, weight=w)
-
-        def lf(p):
-            return models.loss_fn(p, cfg, batch, drop_rng=rng,
-                                  drop_rate=drop_rate)
-        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
-        params, opt_state = optimizer.update(grads, opt_state, params, lr)
-        return params, opt_state, {"loss": loss}
-
-    return step
+    from repro.engine.steps import make_weighted_step
+    return make_weighted_step(cfg, optimizer, layout=layout,
+                              drop_rate=drop_rate)
 
 
 def make_micro_train_step(cfg, optimizer: Optimizer, *,
                           layout: SpmdDualBatch, micro_steps: int = 2,
                           drop_rate: float = 0.0):
-    """Micro-update mode (beyond-weighted variant, DESIGN.md §3.2):
-
-    The small group's rows are split into ``micro_steps`` sequential
-    micro-batches; a lax.scan applies local SGD steps over them starting
-    from the pulled params, and the resulting delta merges into the global
-    update with the model-update factor — recovering ASP's higher
-    small-batch update frequency synchronously.
-    """
-    pw = layout.per_worker
-    n_small_rows = layout.n_small * pw
-
-    def step(params, opt_state, batch, lr, rng):
-        tokens, labels = batch["tokens"], batch["labels"]
-        nl_rows = layout.global_batch - n_small_rows
-        big = {"tokens": tokens[:nl_rows], "labels": labels[:nl_rows]}
-        small = {"tokens": tokens[nl_rows:], "labels": labels[nl_rows:]}
-
-        # large-group gradient (one big batch)
-        def lf_big(p):
-            return models.loss_fn(p, cfg, big, drop_rng=rng,
-                                  drop_rate=drop_rate)
-        (loss_b, _), g_big = jax.value_and_grad(lf_big, has_aux=True)(params)
-
-        # small-group local SGD over micro-batches
-        msz = n_small_rows // micro_steps
-        mt = small["tokens"][: msz * micro_steps].reshape(
-            micro_steps, msz, *tokens.shape[1:])
-        ml = small["labels"][: msz * micro_steps].reshape(
-            micro_steps, msz, *labels.shape[1:])
-
-        def micro(p, xs):
-            t, l = xs
-            def lf(p_):
-                return models.loss_fn(p_, cfg, {"tokens": t, "labels": l},
-                                      drop_rng=rng, drop_rate=drop_rate)
-            (ls, _), g = jax.value_and_grad(lf, has_aux=True)(p)
-            p = jax.tree_util.tree_map(lambda w, gg: w - (lr * gg).astype(w.dtype), p, g)
-            return p, ls
-        p_small, losses = jax.lax.scan(micro, params, (mt, ml))
-
-        # merge: factor-scaled small-group delta + large-group SGD step
-        f = layout.factor_small
-        delta_small = jax.tree_util.tree_map(lambda a, b: a - b, p_small,
-                                             params)
-        params2, opt_state = optimizer.update(g_big, opt_state, params, lr)
-        params2 = jax.tree_util.tree_map(
-            lambda p, d: p + (f * d.astype(jnp.float32)).astype(p.dtype),
-            params2, delta_small)
-        return params2, opt_state, {"loss": loss_b,
-                                    "loss_small": jnp.mean(losses)}
-
-    return step
+    """Micro-update mode (beyond-weighted variant, DESIGN.md §3.2) —
+    canonical implementation: ``repro.engine.steps.make_micro_step``."""
+    from repro.engine.steps import make_micro_step
+    return make_micro_step(cfg, optimizer, layout=layout,
+                           micro_steps=micro_steps, drop_rate=drop_rate)

@@ -1,0 +1,23 @@
+"""Unified phase-scheduled training engine.
+
+    Phase / single_phase / phases_from_hybrid   — schedule construction
+    TrainEngine                                 — compiled-step cache + run loop
+    run_sim                                     — same schedule on the PS sim
+    check_parity                                — PS-sim ↔ SPMD invariant
+
+The three paper schemes are phase lists (baseline: one unweighted phase;
+dbl: one phase with a solved layout; hybrid: ``hybrid_schedule`` mapped via
+``phases_from_hybrid``), all driven by the same engine.
+"""
+from repro.engine.engine import StepKey, TrainEngine
+from repro.engine.phases import Phase, phases_from_hybrid, single_phase
+from repro.engine.sim import run_sim, scaled_time_model
+from repro.engine.steps import (make_fused_dbl_step, make_micro_step,
+                                make_weighted_step)
+
+__all__ = [
+    "Phase", "single_phase", "phases_from_hybrid",
+    "TrainEngine", "StepKey",
+    "run_sim", "scaled_time_model",
+    "make_weighted_step", "make_micro_step", "make_fused_dbl_step",
+]

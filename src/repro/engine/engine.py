@@ -1,0 +1,196 @@
+"""The unified phase-scheduled training engine.
+
+One engine drives all three paper schemes (baseline / dual-batch / hybrid)
+from a list of ``Phase``s, replacing the three step/loop implementations
+that used to live in ``launch/train.py`` (inline loop), ``launch/steps.py``
+and ``core/spmd_dual_batch.py``:
+
+  * compiled-step cache keyed on
+    ``(input_size, batch_size, layout, micro_steps, kind)`` — phases that
+    share a shape/layout reuse the same XLA executable across the schedule
+    (the cyclic part of CPL revisits sizes under every LR stage);
+  * buffer donation throughout (params + optimizer state);
+  * the fused Pallas ``dbl_merge`` server update on the SGD dual-batch hot
+    path (``interpret=True`` fallback off-TPU, ``fused_merge=False`` to
+    fall back to the unfused scale/add/apply sequence);
+  * optional mesh: when given, params / optimizer state / batch shardings
+    are derived from ``launch.sharding`` and attached to every compiled
+    step, so the same schedule runs SPMD on the production mesh unchanged.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine.phases import Phase
+from repro.engine.steps import (make_fused_dbl_step, make_micro_step,
+                                make_weighted_step)
+from repro.optim import Optimizer
+
+
+@dataclass(frozen=True)
+class StepKey:
+    input_size: int
+    batch_size: int
+    layout: object            # SpmdDualBatch or None (frozen -> hashable)
+    micro_steps: int
+    kind: str                 # "weighted" | "micro" | "fused"
+    drop_rate: float          # per-phase dropout (baked into the step)
+
+
+class TrainEngine:
+    """Phase-scheduled trainer.
+
+    fused_merge: "auto" (fused dbl_merge whenever the phase has a dual-batch
+      layout AND the engine was built for the plain-SGD server update),
+      True (force), False (unfused fallback — still two group gradients, but
+      the naive scale/add/apply update).
+    sgd_server: mark the optimizer as the paper's plain-SGD server update so
+      dual-batch phases take the fused kernel path (the optimizer's own
+      update is bypassed there; its state passes through untouched).
+    """
+
+    def __init__(self, cfg, optimizer: Optimizer, *,
+                 fused_merge="auto", sgd_server: bool = False,
+                 drop_rate: float = 0.0, mesh=None, donate: bool = True,
+                 interpret: Optional[bool] = None):
+        self.cfg = cfg
+        self.optimizer = optimizer
+        self.fused_merge = fused_merge
+        self.sgd_server = sgd_server
+        self.drop_rate = drop_rate
+        self.mesh = mesh
+        self.donate = donate
+        self.interpret = interpret
+        self._cache: dict = {}
+        self.compile_count = 0
+
+    # ------------------------------------------------------------------
+    def _kind_for(self, phase: Phase) -> str:
+        if phase.micro_steps and phase.layout is not None:
+            return "micro"
+        if phase.layout is not None and phase.layout.n_small \
+                and phase.layout.small_valid \
+                and (self.sgd_server or self.fused_merge is True):
+            # paper §3.4 server-update path; make_fused_dbl_step picks the
+            # fused kernel or the unfused fallback from self.fused_merge
+            return "fused"
+        return "weighted"
+
+    def _drop_rate_for(self, phase: Phase) -> float:
+        """Per-phase dropout (CPL sub-stage schedule) wins over the engine
+        default."""
+        return phase.dropout if phase.dropout > 0 else self.drop_rate
+
+    def _build(self, key: StepKey):
+        if key.kind == "micro":
+            fn = make_micro_step(self.cfg, self.optimizer,
+                                 layout=key.layout,
+                                 micro_steps=key.micro_steps,
+                                 drop_rate=key.drop_rate)
+            static, donate = (), (0, 1)
+        elif key.kind == "fused":
+            fn = make_fused_dbl_step(self.cfg, key.layout,
+                                     drop_rate=key.drop_rate,
+                                     fused=self.fused_merge is not False,
+                                     interpret=self.interpret)
+            static, donate = (3,), (0, 1)     # lr baked into the kernel
+        else:
+            fn = make_weighted_step(self.cfg, self.optimizer,
+                                    layout=key.layout,
+                                    drop_rate=key.drop_rate)
+            static, donate = (), (0, 1)
+        kw = {}
+        if self.donate:
+            kw["donate_argnums"] = donate
+        jitted = jax.jit(fn, static_argnums=static, **kw)
+        self.compile_count += 1
+        return jitted
+
+    def step_fn(self, phase: Phase):
+        """Compiled step for this phase (cached across phases)."""
+        key = StepKey(phase.input_size, phase.batch_size, phase.layout,
+                      phase.micro_steps, self._kind_for(phase),
+                      self._drop_rate_for(phase))
+        if key not in self._cache:
+            self._cache[key] = self._build(key)
+        return self._cache[key]
+
+    @property
+    def cache_size(self) -> int:
+        return len(self._cache)
+
+    # ------------------------------------------------------------------
+    def _shardings(self, params, opt_state, batch):
+        from jax.sharding import NamedSharding
+        from repro.launch.sharding import batch_specs, param_specs
+        sh = lambda tree: jax.tree_util.tree_map(
+            lambda s: NamedSharding(self.mesh, s), tree)
+        return (sh(param_specs(params, self.mesh)),
+                sh(param_specs(opt_state, self.mesh)),
+                sh(batch_specs(batch, self.mesh)))
+
+    def run(self, phases: Sequence[Phase], params, opt_state,
+            batch_fn: Callable[[Phase, int], dict], *,
+            seed: int = 0, log_every: int = 20,
+            log_fn: Optional[Callable[[dict], None]] = None):
+        """Run the whole schedule.
+
+        batch_fn(phase, global_step) -> batch dict ("tokens"/"labels" or
+        "images"/"labels"); the engine attaches the phase layout's weights.
+        Returns (params, opt_state, history).
+        """
+        history = []
+        rng = jax.random.PRNGKey(seed)
+        t0 = time.time()
+        gstep = 0
+        samples_seen = 0
+        placed = None
+        for pi, phase in enumerate(phases):
+            step = self.step_fn(phase)
+            bsh = None
+            drop = self._drop_rate_for(phase)
+            attach_w = (phase.layout is not None
+                        and self._kind_for(phase) == "weighted")
+            weights = (phase.layout.weights().astype(jnp.float32)
+                       if attach_w else None)
+            for _ in range(phase.n_steps):
+                batch = batch_fn(phase, gstep)
+                if attach_w and "weight" not in batch:
+                    batch = dict(batch, weight=weights)
+                drop_rng = (jax.random.fold_in(rng, gstep)
+                            if drop > 0 else None)
+                if self.mesh is not None:
+                    if placed is None:
+                        psh, osh, bsh = self._shardings(params, opt_state,
+                                                        batch)
+                        params = jax.device_put(params, psh)
+                        opt_state = jax.device_put(opt_state, osh)
+                        placed = True
+                    elif bsh is None:       # new phase: batch shape changed
+                        from repro.launch.sharding import batch_specs
+                        from jax.sharding import NamedSharding
+                        bsh = jax.tree_util.tree_map(
+                            lambda s: NamedSharding(self.mesh, s),
+                            batch_specs(batch, self.mesh))
+                    batch = jax.device_put(batch, bsh)
+                params, opt_state, metrics = step(params, opt_state, batch,
+                                                  phase.lr, drop_rng)
+                gstep += 1
+                samples_seen += phase.batch_size * phase.input_size
+                if gstep == 1 or gstep % log_every == 0:
+                    rec = {"step": gstep, "phase": pi,
+                           "size": phase.input_size,
+                           "batch": phase.batch_size,
+                           "loss": round(float(metrics["loss"]), 4),
+                           "tokens": samples_seen,
+                           "wall_s": round(time.time() - t0, 1),
+                           "compiled": self.cache_size}
+                    history.append(rec)
+                    if log_fn is not None:
+                        log_fn(rec)
+        return params, opt_state, history

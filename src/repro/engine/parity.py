@@ -1,0 +1,125 @@
+"""PS-sim ↔ SPMD parity check (DESIGN §3/§4 invariant, executable form).
+
+Two assertions on a tiny model:
+
+1. **Factor-scaled merge parity** — the engine's weighted-SPMD step equals
+   the parameter-server simulator's factor-scaled merge.  Each sim worker
+   (momentum 0, one BSP iteration) pushes  f_i · (−lr_sim · ḡ_i)  onto the
+   server; summing the per-worker deltas from IDENTICAL pulled params gives
+
+       Δ_sim = −lr_sim · Σ_i f_i ḡ_i .
+
+   The SPMD step's weighted-mean gradient over the same global batch (equal
+   valid rows per worker) is  Σ_i f_i ḡ_i / Σ_i f_i,  so with
+   lr_spmd = lr_sim · Σ_i f_i the two updates are the same merge.
+
+2. **Fused-kernel parity** — the Pallas ``dbl_merge`` hot-path step equals
+   the unfused reference server update  w' = w − lr(g_L + f·g_S)/(1+f).
+
+Run directly:  PYTHONPATH=src python -m repro.engine.parity
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import models
+from repro.configs import get_config, reduced
+from repro.core import (LinearTimeModel, WorkerSpec, simulate, solve_plan)
+from repro.core.spmd_dual_batch import SpmdDualBatch
+from repro.engine.steps import make_fused_dbl_step, make_weighted_step
+from repro.optim import sgd_momentum
+
+
+def _tiny_setup(seed: int):
+    cfg = reduced(get_config("phi3-mini-3.8b"), layers=1, d_model=64,
+                  n_heads=2, vocab=64)
+    params = models.init_params(cfg, jax.random.PRNGKey(seed))
+    tok = jax.random.randint(jax.random.PRNGKey(seed + 1), (8, 16), 0,
+                             cfg.vocab_size)
+    batch = {"tokens": tok, "labels": tok}
+    return cfg, params, batch
+
+
+def check_merge_parity(*, seed: int = 0, lr_sim: float = 0.05,
+                       atol: float = 2e-5) -> dict:
+    """Weighted-SPMD step vs the simulator's factor-scaled merge."""
+    cfg, params, batch = _tiny_setup(seed)
+    tm = LinearTimeModel(a=1.0, b=24.6)
+    plan = solve_plan(tm, B_L=64, d=4096, n_workers=4, n_small=2, k=1.05)
+    f = plan.update_factor_small
+    pw = 2                                 # 8 examples over 4 worker-rows
+    layout = SpmdDualBatch(global_batch=8, n_workers=4, n_small=2,
+                           small_valid=pw, factor_small=f)
+    factors = [1.0] * (layout.n_workers - layout.n_small) \
+        + [f] * layout.n_small
+    lr_spmd = lr_sim * sum(factors)
+
+    # --- SPMD side: one engine weighted step (plain SGD server) ----------
+    opt = sgd_momentum(0.0)
+    step = jax.jit(make_weighted_step(cfg, opt, layout=layout))
+    p_spmd, _, metrics = step(params, opt.init(params), batch, lr_spmd, None)
+
+    # --- simulator side: per-worker single-iteration sims from the SAME
+    # pulled params; their factor-scaled deltas sum into the merge ---------
+    def grad_fn(p, b):
+        return jax.grad(lambda pp: models.loss_fn(pp, cfg, b)[0])(p)
+
+    merged = params
+    for i, fac in enumerate(factors):
+        wbatch = {k: v[i * pw:(i + 1) * pw] for k, v in batch.items()}
+        res = simulate(
+            params, grad_fn, lambda key, wid, bsz, wb=wbatch: wb,
+            [WorkerSpec(batch_size=pw, data_per_epoch=pw,
+                        update_factor=fac, iter_time=1.0)],
+            epochs=1, lr_for_epoch=lambda e: lr_sim, sync="bsp",
+            momentum=0.0, seed=seed)
+        delta = jax.tree_util.tree_map(lambda a, b: a - b, res.params,
+                                       params)
+        merged = jax.tree_util.tree_map(lambda m, d: m + d, merged, delta)
+
+    diff = max(float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                     - b.astype(jnp.float32))))
+               for a, b in zip(jax.tree_util.tree_leaves(p_spmd),
+                               jax.tree_util.tree_leaves(merged)))
+    assert diff < atol, (
+        f"PS-sim merge and weighted-SPMD step diverge: {diff} >= {atol}")
+    return {"max_param_diff": diff, "factor_small": f,
+            "loss": float(metrics["loss"])}
+
+
+def check_fused_parity(*, seed: int = 0, lr: float = 0.05,
+                       atol: float = 1e-5) -> dict:
+    """Fused Pallas dbl_merge step vs the unfused reference update."""
+    cfg, params, batch = _tiny_setup(seed)
+    layout = SpmdDualBatch(global_batch=8, n_workers=4, n_small=2,
+                           small_valid=1, factor_small=0.7)
+    fused = jax.jit(make_fused_dbl_step(cfg, layout, fused=True),
+                    static_argnums=(3,))
+    unfused = jax.jit(make_fused_dbl_step(cfg, layout, fused=False),
+                      static_argnums=(3,))
+    opt = sgd_momentum(0.0)
+    s0 = opt.init(params)
+    p_f, _, m_f = fused(params, s0, batch, lr, None)
+    p_u, _, m_u = unfused(params, s0, batch, lr, None)
+    diff = max(float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                     - b.astype(jnp.float32))))
+               for a, b in zip(jax.tree_util.tree_leaves(p_f),
+                               jax.tree_util.tree_leaves(p_u)))
+    assert diff < atol, (
+        f"fused dbl_merge and unfused update diverge: {diff} >= {atol}")
+    assert np.isfinite(float(m_f["loss"]))
+    return {"max_param_diff": diff, "loss": float(m_f["loss"])}
+
+
+def check_parity(*, seed: int = 0) -> dict:
+    """Run both checks; raises AssertionError on any mismatch."""
+    return {"merge": check_merge_parity(seed=seed),
+            "fused": check_fused_parity(seed=seed)}
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(check_parity(), indent=1))
+    print("parity OK")

@@ -1,0 +1,162 @@
+"""Canonical train-step builders — the ONE implementation behind
+``launch/steps.make_train_step``, ``core/spmd_dual_batch.make_train_step`` /
+``make_micro_train_step`` and the engine's compiled-step cache.
+
+Three step kinds:
+
+  weighted   — single weighted-loss pass; the dual-batch contribution-scaled
+               merge realized as one weighted mean of per-example gradients
+               (works with ANY optimizer).
+  micro      — beyond-weighted variant: the small group takes ``micro_steps``
+               sequential local SGD steps inside one global step (lax.scan)
+               before the factor-weighted merge.
+  fused_dbl  — the paper §3.4 server update for the SGD dual-batch case,
+               applied by the Pallas ``dbl_merge`` kernel in one VMEM pass:
+               w' = w − lr·(g_L + f·g_S)/(1 + f), with g_L/g_S the large and
+               small group mean gradients.  ``interpret=True`` on non-TPU
+               backends; ``fused=False`` falls back to the unfused
+               scale/add/apply HLO sequence (same math, three extra
+               parameter-sized HBM round-trips).
+
+All steps share one signature:
+
+    step(params, opt_state, batch, lr, rng) -> (params, opt_state, metrics)
+
+``rng`` is only consumed when ``drop_rate > 0`` (pass None otherwise);
+``metrics`` always contains "loss".
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import models
+
+
+def _weighted_loss(params, cfg, batch, rng, drop_rate):
+    return models.loss_fn(params, cfg, batch, drop_rng=rng,
+                          drop_rate=drop_rate)
+
+
+def make_weighted_step(cfg, optimizer, *, layout=None, drop_rate: float = 0.0):
+    """Weighted-loss step: batch["weight"] (or ``layout.weights()``) carries
+    the dual-batch per-example contributions; any optimizer."""
+    def step(params, opt_state, batch, lr, rng=None):
+        if layout is not None and "weight" not in batch:
+            batch = dict(batch, weight=layout.weights().astype(jnp.float32))
+        (loss, _), grads = jax.value_and_grad(
+            _weighted_loss, has_aux=True)(params, cfg, batch, rng, drop_rate)
+        params, opt_state = optimizer.update(grads, opt_state, params, lr)
+        return params, opt_state, {"loss": loss}
+
+    return step
+
+
+def _small_valid_index(layout) -> np.ndarray:
+    """Static row indices of the small group's VALID examples in the global
+    padded batch (first ``small_valid`` rows of each small worker block)."""
+    pw = layout.per_worker
+    nl_rows = (layout.n_workers - layout.n_small) * pw
+    return np.concatenate([
+        nl_rows + w * pw + np.arange(layout.small_valid)
+        for w in range(layout.n_small)]).astype(np.int32)
+
+
+def make_fused_dbl_step(cfg, layout, *, drop_rate: float = 0.0,
+                        fused: bool = True, interpret: Optional[bool] = None):
+    """SGD dual-batch step with the fused ``dbl_merge`` parameter update on
+    the hot path (paper §3.4).  ``opt_state`` passes through untouched — the
+    server update IS the optimizer.  ``fused=False`` selects the unfused
+    reference update (flag for perf comparison / debugging)."""
+    from repro.kernels.dbl_merge import dbl_merge_tree
+    from repro.kernels.ref import dbl_merge_ref
+
+    if layout.n_small == 0 or layout.small_valid == 0:
+        raise ValueError("fused dbl step needs a non-empty small group; "
+                         "use make_weighted_step for the baseline")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    pw = layout.per_worker
+    nl_rows = (layout.n_workers - layout.n_small) * pw
+    small_idx = jnp.asarray(_small_valid_index(layout))
+    f = float(layout.factor_small)
+
+    def group_grad(params, batch, rows, rng):
+        sub = {k: v[rows] for k, v in batch.items()
+               if k in ("tokens", "labels", "images", "embeddings")}
+        return jax.value_and_grad(_weighted_loss, has_aux=True)(
+            params, cfg, sub, rng, drop_rate)
+
+    def step(params, opt_state, batch, lr, rng=None):
+        # lr is STATIC here (baked into the fused kernel) — the engine jits
+        # fused steps with static_argnums=(3,); phases carry a constant lr.
+        lr_f = float(lr)
+        (loss_l, _), g_large = group_grad(params, batch,
+                                          jnp.arange(nl_rows), rng)
+        (loss_s, _), g_small = group_grad(params, batch, small_idx, rng)
+        if fused:
+            params = dbl_merge_tree(params, g_large, g_small, factor=f,
+                                    lr=lr_f, interpret=interpret)
+        else:
+            params = jax.tree_util.tree_map(
+                lambda p, gl, gs: dbl_merge_ref(p, gl, gs, factor=f,
+                                                lr=lr_f),
+                params, g_large, g_small)
+        loss = (loss_l + f * loss_s) / (1.0 + f)
+        return params, opt_state, {"loss": loss, "loss_large": loss_l,
+                                   "loss_small": loss_s}
+
+    return step
+
+
+def make_micro_step(cfg, optimizer, *, layout, micro_steps: int = 2,
+                    drop_rate: float = 0.0):
+    """Micro-update mode (beyond-weighted variant, DESIGN.md §3.2): the small
+    group's rows split into ``micro_steps`` sequential micro-batches; a
+    lax.scan applies local SGD steps over them from the pulled params, and
+    the delta merges into the global update with the model-update factor —
+    recovering ASP's higher small-batch update frequency synchronously."""
+    pw = layout.per_worker
+    n_small_rows = layout.n_small * pw
+
+    def step(params, opt_state, batch, lr, rng=None):
+        tokens, labels = batch["tokens"], batch["labels"]
+        nl_rows = layout.global_batch - n_small_rows
+        big = {"tokens": tokens[:nl_rows], "labels": labels[:nl_rows]}
+        small = {"tokens": tokens[nl_rows:], "labels": labels[nl_rows:]}
+
+        # large-group gradient (one big batch)
+        (loss_b, _), g_big = jax.value_and_grad(
+            _weighted_loss, has_aux=True)(params, cfg, big, rng, drop_rate)
+
+        # small-group local SGD over micro-batches
+        msz = n_small_rows // micro_steps
+        mt = small["tokens"][: msz * micro_steps].reshape(
+            micro_steps, msz, *tokens.shape[1:])
+        ml = small["labels"][: msz * micro_steps].reshape(
+            micro_steps, msz, *labels.shape[1:])
+
+        def micro(p, xs):
+            t, l = xs
+            (ls, _), g = jax.value_and_grad(_weighted_loss, has_aux=True)(
+                p, cfg, {"tokens": t, "labels": l}, rng, drop_rate)
+            p = jax.tree_util.tree_map(
+                lambda w, gg: w - (lr * gg).astype(w.dtype), p, g)
+            return p, ls
+        p_small, losses = jax.lax.scan(micro, params, (mt, ml))
+
+        # merge: factor-scaled small-group delta + large-group SGD step
+        f = layout.factor_small
+        delta_small = jax.tree_util.tree_map(lambda a, b: a - b, p_small,
+                                             params)
+        params2, opt_state = optimizer.update(g_big, opt_state, params, lr)
+        params2 = jax.tree_util.tree_map(
+            lambda p, d: p + (f * d.astype(jnp.float32)).astype(p.dtype),
+            params2, delta_small)
+        return params2, opt_state, {"loss": loss_b,
+                                    "loss_small": jnp.mean(losses)}
+
+    return step

@@ -26,7 +26,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import models
 from repro.configs import ARCH_IDS, SHAPES, get_config
-from repro.launch.hlo_analysis import analyze_hlo, roofline_terms
+from repro.launch.hlo_analysis import (analyze_hlo, raw_cost_analysis,
+                                       roofline_terms)
 from repro.launch.mesh import make_production_mesh
 from repro.launch.sharding import batch_specs, cache_specs, param_specs
 from repro.launch.specs import abstract_params, input_specs
@@ -170,7 +171,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str,
             t_compile = time.time() - t0 - t_lower
 
         ma = compiled.memory_analysis()
-        ca = compiled.cost_analysis() or {}
+        ca = raw_cost_analysis(compiled)
         cost = analyze_hlo(compiled.as_text())
         mf = model_flops_for(cfg, shape)
         roof = roofline_terms(

@@ -46,6 +46,44 @@ _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _ARGS_RE = re.compile(r"\(([^)]*)\)")
 
 
+def raw_cost_analysis(compiled) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across jax versions: newer
+    jaxlibs return a one-element list of dicts, older ones a bare dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
+def _split_args(argstr: str):
+    """Split an HLO operand list on top-level commas only — operand tokens
+    carry inline shapes like ``f32[64,128]{1,0} %Arg_0.1`` whose dims also
+    contain commas."""
+    parts, depth, cur = [], 0, []
+    for ch in argstr:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur).strip())
+    return parts
+
+
+def _operand_shape(tok: str, shapes: dict):
+    """Shape string for one operand token: inline shape if present, else
+    symbol-table lookup by name."""
+    if "[" in tok:
+        return tok
+    nm = tok.lstrip("%").split(" ")[-1].lstrip("%")
+    return shapes.get(nm)
+
+
 def _parse_shape(s: str):
     """Return list of (dtype, dims) for every shape literal in s."""
     out = []
@@ -180,12 +218,11 @@ def analyze_hlo(txt: str) -> HloCost:
                 cm = _CONTRACT_RE.search(line)
                 contract_elems = 1
                 args = _ARGS_RE.search(line[line.index("dot("):])
-                lhs_name = None
-                if args:
-                    first = args.group(1).split(",")[0].strip()
-                    lhs_name = first.lstrip("%").split(" ")[-1].lstrip("%")
-                if cm and lhs_name and lhs_name in shapes:
-                    lhs = _parse_shape(shapes[lhs_name])
+                operands = _split_args(args.group(1)) if args else []
+                lhs_shape = (_operand_shape(operands[0], shapes)
+                             if operands else None)
+                if cm and lhs_shape:
+                    lhs = _parse_shape(lhs_shape)
                     if lhs:
                         dims = lhs[0][1]
                         for di in (int(x) for x in cm.group(1).split(",")
@@ -195,14 +232,13 @@ def analyze_hlo(txt: str) -> HloCost:
                 cost.flops += m * 2.0 * res_elems * contract_elems
                 operand_bytes = 0
                 flash_operand_bytes = 0
-                if args:
-                    for a in args.group(1).split(","):
-                        nm = a.strip().lstrip("%").split(" ")[-1].lstrip("%")
-                        if nm in shapes:
-                            b = _shape_bytes(shapes[nm])
-                            operand_bytes += b
-                            if not _score_like(shapes[nm], m):
-                                flash_operand_bytes += b
+                for a in operands:
+                    shp = _operand_shape(a, shapes)
+                    if shp is not None:
+                        b = _shape_bytes(shp)
+                        operand_bytes += b
+                        if not _score_like(shp, m):
+                            flash_operand_bytes += b
                 rb = _shape_bytes(result_shape)
                 cost.dot_bytes += m * (rb + operand_bytes)
                 cost.dot_bytes_flash += m * (

@@ -2,15 +2,10 @@
 training driver and the serving driver."""
 from __future__ import annotations
 
-import functools
 from dataclasses import replace
-
-import jax
-import jax.numpy as jnp
 
 from repro import models
 from repro.configs.base import InputShape, ModelConfig
-from repro.core.spmd_dual_batch import SpmdDualBatch
 from repro.launch.specs import effective_window
 from repro.optim import Optimizer
 
@@ -29,13 +24,15 @@ def with_window_override(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
 def make_train_step(cfg: ModelConfig, optimizer: Optimizer):
     """(params, opt_state, batch, lr) -> (params, opt_state, loss).
 
-    batch["weight"] carries the dual-batch per-example contributions."""
+    batch["weight"] carries the dual-batch per-example contributions.
+    Canonical implementation: ``repro.engine.steps.make_weighted_step``
+    (this wrapper keeps the loss-scalar return the dry-run relies on)."""
+    from repro.engine.steps import make_weighted_step
+    step = make_weighted_step(cfg, optimizer)
+
     def train_step(params, opt_state, batch, lr):
-        def lf(p):
-            return models.loss_fn(p, cfg, batch)
-        (loss, _), grads = jax.value_and_grad(lf, has_aux=True)(params)
-        params, opt_state = optimizer.update(grads, opt_state, params, lr)
-        return params, opt_state, loss
+        params, opt_state, metrics = step(params, opt_state, batch, lr)
+        return params, opt_state, metrics["loss"]
     return train_step
 
 

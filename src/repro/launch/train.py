@@ -1,9 +1,14 @@
-"""End-to-end training driver.
+"""End-to-end training driver — thin front-end over ``repro.engine``.
 
 Runs the paper's three schemes on real (synthetic) data:
   --scheme baseline   single (large) batch size
   --scheme dbl        dual-batch learning (weighted SPMD step)
-  --scheme hybrid     dual-batch x cyclic progressive (seq-len scheduled)
+  --scheme hybrid     dual-batch x cyclic progressive (seq-len scheduled,
+                      phases from core.hybrid.hybrid_schedule)
+
+With ``--optimizer sgd`` the dual-batch parameter update takes the fused
+Pallas ``dbl_merge`` server-update hot path (paper §3.4); pass
+``--no-fused-merge`` to fall back to the unfused scale/add/apply sequence.
 
 Works on any arch config at reduced scale on CPU (examples/ wire it to a
 ~100M-class model) and on the production mesh unchanged.
@@ -15,9 +20,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import functools
 import json
-import time
 
 import jax
 import jax.numpy as jnp
@@ -26,15 +29,37 @@ import numpy as np
 from repro import models
 from repro.checkpoint import save_checkpoint
 from repro.configs import ARCH_IDS, get_config, reduced
-from repro.core import LinearTimeModel, layout_from_plan, solve_plan
-from repro.launch.steps import make_train_step
+from repro.core import LinearTimeModel, hybrid_schedule, solve_plan
 from repro.data import SyntheticTokens
+from repro.engine import TrainEngine, phases_from_hybrid, single_phase
 from repro.optim import make_optimizer
 
 
-def sub_stage_seqs(base_seq: int):
-    """CPL sub-stage sequence lengths (low -> high), paper's 2-sub-stage split."""
-    return (max(16, base_seq // 2), base_seq)
+def build_phases(args):
+    """Phase schedule for the requested scheme (the ONLY scheme-specific
+    branch — everything downstream is the engine)."""
+    tm = LinearTimeModel(a=1.0, b=24.6)   # shape-relative; only ratios matter
+    d = args.global_batch * 64
+    if args.scheme == "hybrid":
+        # CPL sub-stages low -> high seq (paper's 2-sub-stage split), the
+        # dual-batch plan re-solved per sub-stage at its memory-maximal B_L
+        sub_sizes = (max(16, args.seq // 2), args.seq)
+        hp = hybrid_schedule(
+            tm, stages=(len(sub_sizes),), stage_lrs=(args.lr,),
+            sub_sizes=sub_sizes, sub_dropouts=(0.0,) * len(sub_sizes),
+            B_L_ref=args.global_batch, dataset_size=d, n_workers=4,
+            n_small=args.n_small, k=args.k, axis="seq_len")
+        return phases_from_hybrid(hp, total_steps=args.steps,
+                                  global_batch=args.global_batch,
+                                  axis="seq_len",
+                                  micro_steps=args.micro_steps)
+    plan = None
+    if args.scheme == "dbl":
+        plan = solve_plan(tm, B_L=args.global_batch, d=d, n_workers=4,
+                          n_small=args.n_small, k=args.k)
+    return single_phase(input_size=args.seq, n_steps=args.steps, lr=args.lr,
+                        batch_size=args.global_batch, plan=plan,
+                        micro_steps=args.micro_steps)
 
 
 def run(argv=None):
@@ -52,6 +77,12 @@ def run(argv=None):
     ap.add_argument("--k", type=float, default=1.05)
     ap.add_argument("--n-small", type=int, default=3)
     ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--micro-steps", type=int, default=0,
+                    help="micro-update mode: small-group local SGD steps "
+                         "per global step")
+    ap.add_argument("--no-fused-merge", dest="fused", action="store_false",
+                    default=True,
+                    help="unfused server update (dual-batch SGD path)")
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -61,63 +92,51 @@ def run(argv=None):
         cfg = reduced(cfg)
     data = SyntheticTokens(vocab=min(cfg.vocab_size, 256), seed=args.seed)
     rng_np = np.random.RandomState(args.seed)
-    rng = jax.random.PRNGKey(args.seed)
-    params = models.init_params(cfg, rng)
-    opt = make_optimizer(args.optimizer, weight_decay=0.01)
-    opt_state = opt.init(params)
+    params = models.init_params(cfg, jax.random.PRNGKey(args.seed))
 
-    # dual-batch plan: time model measured analytically (a ~ per-sample cost)
-    tm = LinearTimeModel(a=1.0, b=24.6)   # shape-relative; only ratios matter
-    plan = solve_plan(tm, B_L=args.global_batch, d=args.global_batch * 64,
-                      n_workers=4, n_small=args.n_small, k=args.k)
-    layout = layout_from_plan(plan, args.global_batch)
-
-    if args.scheme == "hybrid":
-        phases = [(s, args.steps // 2) for s in sub_stage_seqs(args.seq)]
+    phases = build_phases(args)
+    # plain-SGD dual-batch -> the paper §3.4 server update (fused dbl_merge
+    # hot path).  That update has no momentum/weight-decay state, so the
+    # optimizer is built to match — otherwise the CLI would silently claim
+    # momentum it never applies.  Stateful optimizers (adamw) keep the
+    # weighted-mean path.
+    sgd_server = (args.optimizer == "sgd"
+                  and args.scheme in ("dbl", "hybrid")
+                  and args.micro_steps == 0)
+    if sgd_server:
+        opt = make_optimizer("sgd", momentum=0.0, weight_decay=0.0)
+        print("# dual-batch SGD: paper §3.4 server update "
+              f"({'fused dbl_merge' if args.fused else 'unfused'} path, "
+              "no momentum/weight decay)")
     else:
-        phases = [(args.seq, args.steps)]
+        opt = make_optimizer(args.optimizer, weight_decay=0.01)
+    opt_state = opt.init(params)
+    engine = TrainEngine(cfg, opt, sgd_server=sgd_server,
+                         fused_merge=("auto" if args.fused else False))
 
-    step_fns = {}
-    history = []
-    t0 = time.time()
-    gstep = 0
-    tokens_seen = 0
-    for seq, n_steps in phases:
-        if seq not in step_fns:
-            lay = layout if args.scheme in ("dbl", "hybrid") else None
-            # CPL batch adaptation: shorter seq -> proportionally larger batch
-            bsz = args.global_batch * (args.seq // seq)
-            fn = make_train_step(cfg, opt)
-            step_fns[seq] = (jax.jit(fn, donate_argnums=(0, 1)), bsz, lay)
-        step, bsz, lay = step_fns[seq]
-        for i in range(n_steps):
-            b = data.batch(rng_np, bsz, seq)
-            batch = {"tokens": jnp.asarray(b["tokens"] % cfg.vocab_size),
-                     "labels": jnp.asarray(b["labels"] % cfg.vocab_size)}
-            if lay is not None:
-                from repro.core.spmd_dual_batch import SpmdDualBatch
-                lay_b = SpmdDualBatch(bsz, lay.n_workers, lay.n_small,
-                                      max(1, bsz // lay.global_batch
-                                          * lay.small_valid),
-                                      lay.factor_small)
-                batch["weight"] = lay_b.weights()
-            params, opt_state, loss_v = step(params, opt_state, batch,
-                                             args.lr)
-            tokens_seen += bsz * seq
-            gstep += 1
-            if gstep % 20 == 0 or gstep == 1:
-                loss = float(loss_v)
-                rec = {"step": gstep, "seq": seq, "batch": bsz,
-                       "loss": round(loss, 4),
-                       "tokens": tokens_seen,
-                       "wall_s": round(time.time() - t0, 1)}
-                history.append(rec)
-                print(json.dumps(rec))
+    def batch_fn(phase, gstep):
+        b = data.batch(rng_np, phase.batch_size, phase.input_size)
+        return {"tokens": jnp.asarray(b["tokens"] % cfg.vocab_size),
+                "labels": jnp.asarray(b["labels"] % cfg.vocab_size)}
 
+    def log_fn(rec):
+        print(json.dumps(_to_cli_rec(rec)))
+
+    params, opt_state, hist = engine.run(phases, params, opt_state,
+                                         batch_fn, seed=args.seed,
+                                         log_fn=log_fn)
+    history = [_to_cli_rec(r) for r in hist]
     if args.ckpt:
-        save_checkpoint(args.ckpt, gstep, params)
-        print(f"saved checkpoint at step {gstep} -> {args.ckpt}")
+        final_step = sum(p.n_steps for p in phases)
+        save_checkpoint(args.ckpt, final_step, params)
+        print(f"saved checkpoint at step {final_step} -> {args.ckpt}")
     return history
+
+
+def _to_cli_rec(rec: dict) -> dict:
+    return {"step": rec["step"], "seq": rec["size"], "batch": rec["batch"],
+            "loss": rec["loss"], "tokens": rec["tokens"],
+            "wall_s": rec["wall_s"]}
 
 
 if __name__ == "__main__":

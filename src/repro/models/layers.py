@@ -41,16 +41,33 @@ def rope_freqs(head_dim: int, theta: float):
                             / head_dim))
 
 
+def _tile2_last(t, hd: int):
+    """[t, t] along the last dim via broadcast+reshape, NOT concatenate."""
+    return jnp.broadcast_to(t[..., None, :], (*t.shape[:-1], 2, hd // 2)) \
+              .reshape(*t.shape[:-1], hd)
+
+
 def apply_rope(x, positions, theta: float):
-    """x: (..., S, H, hd); positions: (..., S) int32."""
+    """x: (..., S, H, hd); positions: (..., S) int32.
+
+    Roll-based rotate-half: out = x·[cos,cos] + roll(x, hd/2)·[−sin,sin].
+    Algebraically identical to the split/concat form, but never splits or
+    concatenates along the head dim: the jax 0.4.37 CPU SPMD partitioner
+    produces wrong values when a tensor that is model-sharded on that dim is
+    split/concatenated and combined elementwise with an in-graph concat
+    (tests/test_spmd.py guards the end-to-end parity).
+    """
     hd = x.shape[-1]
     freqs = jnp.asarray(rope_freqs(hd, theta))               # (hd/2,)
     ang = positions[..., None].astype(jnp.float32) * freqs    # (..., S, hd/2)
     cos = jnp.cos(ang)[..., None, :]                          # (..., S, 1, hd/2)
     sin = jnp.sin(ang)[..., None, :]
-    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
-    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
-    return out.astype(x.dtype)
+    sign = jnp.asarray(np.repeat(np.float32([-1.0, 1.0]), hd // 2))
+    cos_full = _tile2_last(cos, hd)                           # (..., S, 1, hd)
+    sin_signed = _tile2_last(sin, hd) * sign
+    xf = x.astype(jnp.float32)
+    rot = jnp.roll(xf, hd // 2, axis=-1)                      # [x2, x1]
+    return (xf * cos_full + rot * sin_signed).astype(x.dtype)
 
 
 def chunked_cross_entropy(hidden, head, labels, *, chunk: int = 8192,

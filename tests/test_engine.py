@@ -1,0 +1,155 @@
+"""Unified training engine: schedule construction, compiled-step cache,
+fused dbl_merge hot path, and the PS-sim <-> SPMD parity invariant."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import models
+from repro.configs import get_config, reduced
+from repro.core import LinearTimeModel, hybrid_schedule, solve_plan
+from repro.engine import TrainEngine, phases_from_hybrid, single_phase
+from repro.optim import make_optimizer, sgd_momentum
+
+TM = LinearTimeModel(a=1.0, b=24.6)
+
+
+def tiny_cfg():
+    return reduced(get_config("phi3-mini-3.8b"), layers=1, d_model=64,
+                   n_heads=2, vocab=64)
+
+
+def token_batch_fn(cfg, seed=0):
+    rng = np.random.RandomState(seed)
+
+    def batch_fn(phase, gstep):
+        tok = rng.randint(0, cfg.vocab_size,
+                          (phase.batch_size, phase.input_size))
+        return {"tokens": jnp.asarray(tok), "labels": jnp.asarray(tok)}
+    return batch_fn
+
+
+# ---------------------------- phases ---------------------------------------
+def test_phases_from_hybrid_maps_substages():
+    hp = hybrid_schedule(TM, stages=(2,), stage_lrs=(0.01,),
+                         sub_sizes=(16, 32), sub_dropouts=(0.0, 0.0),
+                         B_L_ref=8, dataset_size=512, n_workers=4,
+                         n_small=2, k=1.05, axis="seq_len")
+    phases = phases_from_hybrid(hp, total_steps=10, global_batch=8,
+                                axis="seq_len")
+    assert len(phases) == 2
+    assert [p.input_size for p in phases] == [16, 32]
+    assert sum(p.n_steps for p in phases) == 10
+    # CPL batch adaptation: half seq -> double batch, worker-divisible
+    assert phases[0].batch_size == 16 and phases[1].batch_size == 8
+    # per-sub-stage re-solved layouts
+    for p in phases:
+        assert p.layout is not None and p.layout.n_small == 2
+        assert p.layout.global_batch == p.batch_size
+        assert 0 < p.layout.factor_small <= 1.0
+
+
+def test_single_phase_baseline_has_no_layout():
+    (p,) = single_phase(input_size=32, n_steps=4, lr=0.01, batch_size=8)
+    assert p.layout is None and p.plan is None
+
+
+# ------------------------- engine run + cache -------------------------------
+def test_engine_hybrid_run_caches_steps():
+    cfg = tiny_cfg()
+    hp = hybrid_schedule(TM, stages=(2,), stage_lrs=(0.01,),
+                         sub_sizes=(16, 32), sub_dropouts=(0.0, 0.0),
+                         B_L_ref=8, dataset_size=512, n_workers=4,
+                         n_small=2, k=1.05, axis="seq_len")
+    phases = phases_from_hybrid(hp, total_steps=6, global_batch=8,
+                                axis="seq_len")
+    opt = make_optimizer("adamw")
+    engine = TrainEngine(cfg, opt)
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    params, _, hist = engine.run(phases, params, opt.init(params),
+                                 token_batch_fn(cfg), log_every=2)
+    assert engine.cache_size == 2          # one compiled step per sub-stage
+    assert hist and all(np.isfinite(h["loss"]) for h in hist)
+    sizes = {h["size"] for h in hist}
+    assert sizes == {16, 32}
+
+
+def test_engine_cache_reuses_identical_phases():
+    cfg = tiny_cfg()
+    plan = solve_plan(TM, B_L=8, d=512, n_workers=4, n_small=2, k=1.05)
+    (p1,) = single_phase(input_size=16, n_steps=2, lr=0.01, batch_size=8,
+                         plan=plan)
+    (p2,) = single_phase(input_size=16, n_steps=2, lr=0.02, batch_size=8,
+                         plan=plan)          # same shape/layout, new lr
+    opt = make_optimizer("adamw")
+    engine = TrainEngine(cfg, opt)
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    engine.run([p1, p2], params, opt.init(params), token_batch_fn(cfg))
+    assert engine.cache_size == 1          # lr is dynamic on this path
+
+
+def test_engine_loss_decreases_dbl():
+    cfg = tiny_cfg()
+    plan = solve_plan(TM, B_L=16, d=1024, n_workers=4, n_small=3, k=1.05)
+    phases = single_phase(input_size=32, n_steps=30, lr=5e-3,
+                          batch_size=16, plan=plan)
+    opt = make_optimizer("adamw")
+    engine = TrainEngine(cfg, opt)
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    _, _, hist = engine.run(phases, params, opt.init(params),
+                            token_batch_fn(cfg), log_every=29)
+    assert hist[-1]["loss"] < hist[0]["loss"]
+
+
+# ------------------------- fused server update ------------------------------
+def test_fused_path_selected_for_sgd_server():
+    cfg = tiny_cfg()
+    plan = solve_plan(TM, B_L=8, d=512, n_workers=4, n_small=2, k=1.05)
+    (phase,) = single_phase(input_size=16, n_steps=1, lr=0.01,
+                            batch_size=8, plan=plan)
+    engine = TrainEngine(cfg, sgd_momentum(0.0), sgd_server=True)
+    assert engine._kind_for(phase) == "fused"
+    engine_w = TrainEngine(cfg, make_optimizer("adamw"))
+    assert engine_w._kind_for(phase) == "weighted"
+
+
+def test_fused_and_unfused_updates_match():
+    cfg = tiny_cfg()
+    plan = solve_plan(TM, B_L=8, d=512, n_workers=4, n_small=2, k=1.05)
+    phases = single_phase(input_size=16, n_steps=2, lr=0.05, batch_size=8,
+                          plan=plan)
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    out = {}
+    for fused in ("auto", False):
+        opt = sgd_momentum(0.0)
+        engine = TrainEngine(cfg, opt, sgd_server=True, fused_merge=fused)
+        p0 = jax.tree_util.tree_map(jnp.copy, params)   # run() donates
+        p, _, _ = engine.run(phases, p0, opt.init(p0),
+                             token_batch_fn(cfg), log_every=1)
+        out[fused] = p
+    diff = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(
+        jax.tree_util.tree_leaves(out["auto"]),
+        jax.tree_util.tree_leaves(out[False])))
+    assert diff < 1e-5, diff
+
+
+# ------------------------------- parity -------------------------------------
+def test_ps_sim_spmd_parity():
+    from repro.engine.parity import check_parity
+    rec = check_parity(seed=0)
+    assert rec["merge"]["max_param_diff"] < 2e-5
+    assert rec["fused"]["max_param_diff"] < 1e-5
+
+
+# ------------------------------ micro mode ----------------------------------
+def test_engine_micro_mode_runs():
+    cfg = tiny_cfg()
+    plan = solve_plan(TM, B_L=8, d=512, n_workers=4, n_small=2, k=1.05)
+    phases = single_phase(input_size=16, n_steps=2, lr=0.01, batch_size=8,
+                          plan=plan, micro_steps=2)
+    opt = sgd_momentum(0.9)
+    engine = TrainEngine(cfg, opt)
+    assert engine._kind_for(phases[0]) == "micro"
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    _, _, hist = engine.run(phases, params, opt.init(params),
+                            token_batch_fn(cfg), log_every=1)
+    assert all(np.isfinite(h["loss"]) for h in hist)

@@ -1,11 +1,16 @@
-"""Hypothesis property tests on system invariants."""
-import math
+"""Hypothesis property tests on system invariants.
 
+Collects to a clean skip when hypothesis is absent (it is a declared dev
+dependency in pyproject.toml, but CPU-only smoke containers may not have
+it baked in).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.dual_batch import solve_plan
 from repro.core.progressive import adapt_batch, cyclic_schedule
