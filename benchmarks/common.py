@@ -16,9 +16,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import models
+from repro.cluster import ASP, PsSimBackend
 from repro.configs import get_config
-from repro.core import (LinearTimeModel, simulate, solve_plan,
-                        workers_from_plan)
+from repro.core import LinearTimeModel, solve_plan
+from repro.engine.phases import Phase
 from repro.optim import staged_lr
 
 # experiment constants (CPU-scale analogue of the paper's CIFAR setup);
@@ -73,8 +74,10 @@ def make_fns(cfg, data, resolution: int):
 def run_dbl(*, n_small: int, k: float = 1.05, factor: str = "ds_over_dl",
             epochs: int = 8, resolution: int = 32, lr: float = 0.05,
             seed: int = 0, params=None, tm: LinearTimeModel = TM,
-            sync: str = "asp"):
-    """One dual-batch-learning run; returns (final eval, sim_time, params)."""
+            sync="asp", jitter=0.0):
+    """One dual-batch-learning run on the PS-sim backend; returns
+    (final eval, sim_time, params, plan).  ``sync`` takes a SyncPolicy
+    object (or the legacy string)."""
     cfg, data, p0 = build_problem(seed)
     if params is not None:
         p0 = params
@@ -82,50 +85,49 @@ def run_dbl(*, n_small: int, k: float = 1.05, factor: str = "ds_over_dl",
                       n_small=n_small, k=k, factor=factor) \
         if n_small else solve_plan(tm, B_L=B_L, d=N_TRAIN,
                                    n_workers=N_WORKERS, n_small=0, k=1.0)
-    workers = workers_from_plan(plan, tm)
-    grad_fn, data_fn, eval_fn = make_fns(cfg, data, resolution)
-    res = simulate(p0, grad_fn, data_fn, workers, epochs=epochs,
-                   lr_for_epoch=staged_lr([epochs * 3 // 4, epochs],
-                                          [lr, lr / 5]),
-                   sync=sync, eval_fn=eval_fn, seed=seed)
-    return res.history[-1], res.sim_time, res.params, plan
+    phases = (Phase(input_size=resolution, n_steps=0, lr=lr,
+                    batch_size=B_L, epochs=epochs, plan=plan,
+                    lr_for_epoch=staged_lr([epochs * 3 // 4, epochs],
+                                           [lr, lr / 5])),)
+    backend = PsSimBackend(lambda r: make_fns(cfg, data, r), tm=tm,
+                           axis="resolution", sync=sync, jitter=jitter)
+    res = backend.run(phases, p0, seed=seed)
+    return res.last, res.time, res.params, plan
 
 
 def run_hybrid(*, n_small: int, k: float = 1.05,
                factor: str = "ds_over_dl", epochs: int = 8,
                resolutions=(24, 32), lr: float = 0.05, seed: int = 0,
                tm: LinearTimeModel = TM):
-    """Hybrid: per sub-stage, re-solve DBL at the resolution-adapted B_L and
-    run the PS sim at that resolution; params carry across phases."""
+    """Hybrid: per sub-stage, re-solve DBL at the resolution-adapted B_L;
+    the whole CPL x DBL schedule is one Phase list on the PS-sim backend
+    (params carry across phases, fns memoized per resolution so revisited
+    sizes don't recompile)."""
+    from repro.cluster import scaled_time_model
     from repro.core import adapt_batch
     cfg, data, params = build_problem(seed)
     r_max = max(resolutions)
     sub_epochs = max(1, epochs // len(resolutions))
-    sim_time = 0.0
-    last = {}
+    phases = []
     for stage_lr in (lr, lr / 5):
         for r in resolutions:
-            scale = (r / r_max) ** 2
-            tm_sub = LinearTimeModel(a=tm.a * scale, b=tm.b)
+            tm_sub = scaled_time_model(tm, r, r_max, axis="resolution")
             bl_r = adapt_batch(B_L, r_max, r)
             plan = solve_plan(tm_sub, B_L=bl_r, d=N_TRAIN,
                               n_workers=N_WORKERS, n_small=n_small, k=k,
                               factor=factor) if n_small else \
                 solve_plan(tm_sub, B_L=bl_r, d=N_TRAIN,
                            n_workers=N_WORKERS, n_small=0, k=1.0)
-            workers = workers_from_plan(plan, tm_sub)
-            grad_fn, data_fn, eval_fn = make_fns(cfg, data, r)
-            res = simulate(params, grad_fn, data_fn, workers,
-                           epochs=max(1, sub_epochs // 2),
-                           lr_for_epoch=lambda e: stage_lr,
-                           sync="asp", eval_fn=eval_fn, seed=seed)
-            params = res.params
-            sim_time += res.sim_time
-            last = res.history[-1] if res.history else last
+            phases.append(Phase(input_size=r, n_steps=0, lr=stage_lr,
+                                batch_size=bl_r,
+                                epochs=max(1, sub_epochs // 2), plan=plan))
+    backend = PsSimBackend(lambda r: make_fns(cfg, data, r), tm=tm,
+                           axis="resolution", sync=ASP(), ref_size=r_max)
+    res = backend.run(tuple(phases), params, seed=seed)
     # final eval at full resolution
-    grad_fn, data_fn, eval_fn = make_fns(cfg, data, r_max)
-    last = {**last, **eval_fn(params)}
-    return last, sim_time, params
+    _, _, eval_fn = make_fns(cfg, data, r_max)
+    last = {**res.last, **eval_fn(res.params)}
+    return last, res.time, res.params
 
 
 def timeit(fn, *args, repeats: int = 3):

@@ -1,0 +1,66 @@
+"""PS-simulator throughput: the compiled-update cache (retrace fix).
+
+Before the cluster-runtime refactor, ``simulate()`` rebuilt its jitted
+``apply_push``/``local_update`` closures on every invocation, so every
+phase of a schedule re-traced and re-compiled the update.  The simulator
+now caches the compiled update keyed on ``grad_fn`` identity
+(``repro.cluster.simulator.local_update_for``), and the PS-sim backend
+memoizes its per-size grad_fns, so only the first phase at a given shape
+pays XLA.
+
+Rows:
+  ps_sim/cold_call      — microseconds per ``simulate()`` call with a fresh
+                          grad_fn identity (the pre-fix behavior: trace +
+                          compile every call).  Deliberately NOT named
+                          ``*_us``: it measures compile time, which swings
+                          across machines/XLA versions, so it must stay
+                          outside the regression gate.
+  ps_sim/warm_call_us   — same grad_fn, cached compiled update (post-fix
+                          steady state; this is the gated hot-path row)
+  ps_sim/retrace_speedup — cold/warm ratio (derived, not gated)
+"""
+from __future__ import annotations
+
+import time
+
+from repro.cluster import ASP, WorkerSpec, simulate
+
+
+def _mean_time(fn, repeats: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn()
+    return (time.perf_counter() - t0) / repeats
+
+
+def run(quick: bool = True):
+    from benchmarks.common import TM, build_problem, make_fns
+    cfg, data, params = build_problem(0)
+    grad_fn, data_fn, _ = make_fns(cfg, data, 32)
+    # 2 workers x 2 iters/epoch: enough pushes to see steady-state step cost
+    workers = [WorkerSpec(16, 32, 1.0, TM.batch_time(16)) for _ in range(2)]
+
+    def sim(gf):
+        return simulate(params, gf, data_fn, workers, epochs=1,
+                        lr_for_epoch=lambda e: 0.05, sync=ASP(),
+                        momentum=0.9, seed=0)
+
+    reps = 3 if quick else 10
+    # cold: new closure identity per call -> the cached-update lookup
+    # misses and the update is re-traced + re-compiled (pre-fix behavior)
+    t_cold = _mean_time(lambda: sim(lambda p, b: grad_fn(p, b)), reps)
+    sim(grad_fn)                       # prime the cache
+    t_warm = _mean_time(lambda: sim(grad_fn), reps)
+    return [
+        ("ps_sim/cold_call", t_cold * 1e6,
+         "us/call; fresh jit closures per simulate() (pre-fix; ungated — "
+         "compile time)"),
+        ("ps_sim/warm_call_us", t_warm * 1e6,
+         "cached compiled update (steady state)"),
+        ("ps_sim/retrace_speedup", t_cold / t_warm, "cold/warm"),
+    ]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -4,19 +4,22 @@ dual-batch plan — simulated wall-clock and accuracy.
 The paper *chooses* ASP for dual-batch (different group speeds must not
 block); this benchmark quantifies that choice: BSP pays the straggler gap
 whenever load balance is imperfect (B_S rounding), SSP(s) interpolates.
+Sync semantics are ``SyncPolicy`` objects (repro.cluster.sync), not
+strings.
 """
 from __future__ import annotations
 
 from benchmarks.common import run_dbl
+from repro.cluster import ASP, BSP, SSP
 
 
 def run(quick: bool = True):
     epochs = 6 if quick else 16
     rows = []
-    for sync in ("bsp", "ssp", "asp"):
+    for policy in (BSP(), SSP(3), ASP()):
         last, sim_t, _, plan = run_dbl(n_small=3, k=1.05, epochs=epochs,
-                                       seed=0, sync=sync)
-        rows.append((f"sync/{sync}", sim_t * 1e6,
+                                       seed=0, sync=policy)
+        rows.append((f"sync/{policy.name}", sim_t * 1e6,
                      f"acc={last['test_acc']:.3f} "
                      f"loss={last['test_loss']:.3f}"))
     return rows

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from repro import models
 from repro.configs import get_config, reduced
 from repro.core import LinearTimeModel, solve_plan
-from repro.engine import TrainEngine, single_phase
+from repro.engine import SpmdBackend, TrainEngine, single_phase
 from repro.optim import sgd_momentum
 
 mesh = jax.make_mesh((4, 2), ("data", "model"))
@@ -42,10 +42,11 @@ def batch_fn(phase, gstep):
     return {"tokens": tok, "labels": tok}
 
 
-params, state, hist = engine.run(phases, params, opt.init(params), batch_fn,
-                                 log_every=3)
-for h in hist:
+res = SpmdBackend(engine, batch_fn).run(phases, params, log_every=3)
+params = res.params
+for h in res.history:
     print(f"step {h['step']}: loss {h['loss']:.4f}")
+print(f"backend={res.backend} phases={res.phases}")
 
 # The fused Pallas server-update kernel (paper Eq. update, one VMEM pass):
 from repro.kernels.ops import dbl_merge

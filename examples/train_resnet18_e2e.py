@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import models
+from repro.cluster import ASP, BSP
 from repro.configs import get_config
 from repro.core import LinearTimeModel, hybrid_schedule, solve_plan
 from repro.data import SyntheticImages
@@ -72,8 +73,8 @@ def main():
                           epochs=epochs * 3 // 4) \
         + single_phase(input_size=32, n_steps=0, lr=0.01, batch_size=B_L,
                        plan=plan0, epochs=epochs - epochs * 3 // 4)
-    _, t, last = run_sim(phases, init(), fns_factory, tm=tm, sync="bsp")
-    results["baseline"] = (last, t)
+    res = run_sim(phases, init(), fns_factory, tm=tm, sync=BSP())
+    results["baseline"] = (res.last, res.time)
 
     # --- dual-batch learning (ASP, 3 small workers, k=1.05) --------------
     plan = solve_plan(tm, B_L=B_L, d=d, n_workers=n, n_small=3, k=1.05)
@@ -82,8 +83,8 @@ def main():
                           epochs=epochs * 3 // 4) \
         + single_phase(input_size=32, n_steps=0, lr=0.01, batch_size=B_L,
                        plan=plan, epochs=epochs - epochs * 3 // 4)
-    _, t, last = run_sim(phases, init(), fns_factory, tm=tm, sync="asp")
-    results["dual-batch"] = (last, t)
+    res = run_sim(phases, init(), fns_factory, tm=tm, sync=ASP())
+    results["dual-batch"] = (res.last, res.time)
 
     # --- hybrid: CPL sub-stages 24 -> 32 under each LR stage -------------
     hp = hybrid_schedule(tm, stages=(epochs // 2, epochs // 2),
@@ -93,11 +94,13 @@ def main():
                          axis="resolution")
     phases = phases_from_hybrid(hp, total_steps=0, global_batch=B_L,
                                 axis="resolution")
-    params, t, last = run_sim(phases, init(), fns_factory, tm=tm,
-                              sync="asp", axis="resolution")
+    res = run_sim(phases, init(), fns_factory, tm=tm, sync=ASP(),
+                  axis="resolution")
     _, _, eval_fn = fns_factory(32)
-    last = {**last, **eval_fn(params)}
-    results["hybrid"] = (last, t)
+    last = {**res.last, **eval_fn(res.params)}
+    results["hybrid"] = (last, res.time)
+    print(f"hybrid history: {len(res.history)} epoch records over "
+          f"{len(res.phases)} phases (absolute sim-time offsets)")
 
     print(f"\n{'scheme':<12} {'test_acc':>8} {'test_loss':>9} "
           f"{'sim_time_s':>10}")

@@ -1,3 +1,5 @@
-from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint, latest_step
+from repro.checkpoint.ckpt import (latest_step, load_checkpoint,
+                                   restore_latest, save_checkpoint)
 
-__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step",
+           "restore_latest"]

@@ -56,8 +56,24 @@ def latest_step(path: str) -> int | None:
     return max(steps) if steps else None
 
 
+def restore_latest(path: str, like: Any) -> tuple:
+    """(step, tree) from the newest checkpoint under ``path``, or
+    (None, None) when there is none — the backends' phase-boundary resume
+    entry point."""
+    step = latest_step(path)
+    if step is None:
+        return None, None
+    return step, load_checkpoint(path, step, like)
+
+
 def load_checkpoint(path: str, step: int, like: Any) -> Any:
-    """Restore into the structure of `like` (shapes/dtypes validated)."""
+    """Restore into the structure of `like` (shapes/dtypes validated).
+
+    jax-array references restore as jax arrays (canonicalized dtypes);
+    plain numpy references keep their exact numpy dtype — x64 metadata
+    leaves (e.g. a backend's cumulative sim clock) must round-trip without
+    a float32 detour.
+    """
     fname = os.path.join(path, f"ckpt_{step:08d}.npz")
     data = np.load(fname)
     paths, treedef = jax.tree_util.tree_flatten_with_path(like)
@@ -70,5 +86,8 @@ def load_checkpoint(path: str, step: int, like: Any) -> Any:
         if tuple(arr.shape) != tuple(np.shape(ref)):
             raise ValueError(f"shape mismatch for {key}: "
                              f"{arr.shape} vs {np.shape(ref)}")
-        leaves.append(jnp.asarray(arr, dtype=jnp.asarray(ref).dtype))
+        if isinstance(ref, jax.Array):
+            leaves.append(jnp.asarray(arr, dtype=ref.dtype))
+        else:
+            leaves.append(arr.astype(np.asarray(ref).dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves)

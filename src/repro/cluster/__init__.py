@@ -1,0 +1,26 @@
+"""The cluster runtime: one backend interface over the PS simulator and
+the SPMD engine.
+
+    sync       — pluggable BSP/ASP/SSP ``SyncPolicy`` objects
+    topology   — per-worker time models, straggler jitter, elastic events
+    simulator  — the event-driven PS loop (cached compiled updates)
+    backend    — ``Backend`` protocol; ``PsSimBackend`` / ``SpmdBackend``
+                 run the same ``Phase`` schedule with unified history and
+                 phase-boundary checkpoint/resume
+"""
+from repro.cluster.backend import (Backend, PsSimBackend, RunResult,
+                                   SpmdBackend, phase_record, phase_seed,
+                                   scaled_time_model)
+from repro.cluster.simulator import (SimResult, local_update_cache_size,
+                                     local_update_for, simulate)
+from repro.cluster.sync import ASP, BSP, SSP, SyncPolicy, as_policy
+from repro.cluster.topology import (ClusterEvent, WorkerSpec,
+                                    workers_from_plan)
+
+__all__ = [
+    "SyncPolicy", "BSP", "ASP", "SSP", "as_policy",
+    "WorkerSpec", "ClusterEvent", "workers_from_plan",
+    "SimResult", "simulate", "local_update_for", "local_update_cache_size",
+    "Backend", "RunResult", "PsSimBackend", "SpmdBackend",
+    "phase_record", "phase_seed", "scaled_time_model",
+]

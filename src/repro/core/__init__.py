@@ -4,16 +4,28 @@
 - dual_batch:      Eq. 4-8 plan solver + model-update factors
 - progressive:     cyclic progressive learning schedules
 - hybrid:          CPL x DBL composition
-- param_server:    event-driven BSP/ASP/SSP simulator (faithful form)
 - spmd_dual_batch: synchronous TPU-native dual-batch train step
+
+The event-driven BSP/ASP/SSP simulator lives in ``repro.cluster``; this
+package re-exports its core names (lazily — ``repro.cluster`` itself
+imports ``core.time_model``, so an eager import here would be circular).
 """
 from repro.core.dual_batch import DualBatchPlan, plan_table, solve_plan, update_factor
 from repro.core.hybrid import HybridPhase, hybrid_schedule, predicted_total_time
-from repro.core.param_server import SimResult, WorkerSpec, simulate, workers_from_plan
 from repro.core.progressive import SubStagePlan, adapt_batch, cyclic_schedule, total_cost
 from repro.core.spmd_dual_batch import (SpmdDualBatch, layout_from_plan,
                                         make_micro_train_step, make_train_step)
 from repro.core.time_model import LinearTimeModel, MemoryModel, measure_time_model
+
+_CLUSTER_NAMES = ("SimResult", "WorkerSpec", "simulate", "workers_from_plan")
+
+
+def __getattr__(name):
+    if name in _CLUSTER_NAMES:
+        import repro.cluster as cluster
+        return getattr(cluster, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 
 __all__ = [
     "DualBatchPlan", "solve_plan", "plan_table", "update_factor",

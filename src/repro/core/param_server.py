@@ -1,160 +1,13 @@
-"""Event-driven parameter-server simulator (paper §2.3/2.4, faithful form).
+"""Compatibility shim — the event-driven PS simulator moved to
+``repro.cluster`` (sync policies in ``cluster.sync``, worker topology in
+``cluster.topology``, the event loop in ``cluster.simulator``, the schedule
+entry point in ``cluster.backend.PsSimBackend``).  Import from there."""
+from repro.cluster.simulator import SimResult, simulate
+from repro.cluster.sync import ASP, BSP, SSP, SyncPolicy, as_policy
+from repro.cluster.topology import (ClusterEvent, WorkerSpec,
+                                    workers_from_plan)
 
-Logical workers own local replicas and push factor-scaled deltas to a
-central server under BSP / ASP / SSP semantics.  *Gradients are real* (JAX,
-on the actual model); *time is simulated* from the paper's linear time model
-(Eq. 2), so staleness patterns, straggler effects and the simulated
-wall-clock match the paper's cluster without needing one.
-
-This is what validates the paper's accuracy claims (Tables 3/5/8) on CPU;
-the deployable TPU form lives in core/spmd_dual_batch.py.
-"""
-from __future__ import annotations
-
-import heapq
-import math
-from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Sequence
-
-import jax
-import jax.numpy as jnp
-
-
-@dataclass(frozen=True)
-class WorkerSpec:
-    batch_size: int
-    data_per_epoch: float    # d_i from the dual-batch plan
-    update_factor: float     # model-update factor (1.0 for large-batch)
-    iter_time: float         # a*B + b seconds per iteration (Eq. 2)
-
-    @property
-    def iters_per_epoch(self) -> int:
-        return max(1, math.ceil(self.data_per_epoch / self.batch_size))
-
-
-@dataclass
-class SimResult:
-    sim_time: float
-    history: List[dict] = field(default_factory=list)   # per-epoch evals
-    params: object = None
-
-
-def workers_from_plan(plan, tm) -> List[WorkerSpec]:
-    """Build WorkerSpecs from a DualBatchPlan + LinearTimeModel."""
-    ws = []
-    for _ in range(plan.n_large):
-        ws.append(WorkerSpec(plan.B_L, plan.d_L, 1.0,
-                             tm.batch_time(plan.B_L)))
-    for _ in range(plan.n_small):
-        ws.append(WorkerSpec(plan.B_S, plan.d_S, plan.update_factor_small,
-                             tm.batch_time(plan.B_S)))
-    return ws
-
-
-def simulate(init_params, grad_fn: Callable, data_fn: Callable,
-             workers: Sequence[WorkerSpec], *, epochs: int,
-             lr_for_epoch: Callable[[int], float], sync: str = "asp",
-             staleness: int = 3, momentum: float = 0.9,
-             eval_fn: Optional[Callable] = None, seed: int = 0) -> SimResult:
-    """Run the PS simulation.
-
-    grad_fn(params, batch) -> grads (same pytree as params)
-    data_fn(rng_key, worker_id, batch_size) -> batch
-    eval_fn(params) -> dict of metrics, called at each epoch boundary
-      (epoch = when the *slowest* worker finishes its allocation).
-    sync: "bsp" | "asp" | "ssp" (ssp uses `staleness`; bsp == ssp(0),
-      asp == ssp(inf) — paper §2.4).
-    """
-    if sync == "bsp":
-        staleness = 0
-    elif sync == "asp":
-        staleness = 10 ** 9
-
-    n = len(workers)
-    global_params = init_params
-    velocity = [jax.tree_util.tree_map(jnp.zeros_like, init_params)
-                for _ in range(n)]
-
-    @jax.jit
-    def apply_push(gp, delta, factor):
-        return jax.tree_util.tree_map(lambda w, d: w + factor * d, gp, delta)
-
-    @jax.jit
-    def local_update(params, vel, batch, lr):
-        grads = grad_fn(params, batch)
-        vel = jax.tree_util.tree_map(
-            lambda v, g: momentum * v + g, vel, grads)
-        delta = jax.tree_util.tree_map(lambda v: -lr * v, vel)
-        return delta, vel
-
-    total_iters = [epochs * w.iters_per_epoch for w in workers]
-    done_iters = [0] * n
-    epoch_done = [0] * n
-    rng = jax.random.PRNGKey(seed)
-    history: List[dict] = []
-    sim_time = 0.0
-    evaluated_epochs = 0
-
-    # event queue: (ready_time, worker_id)
-    heap = [(workers[i].iter_time, i) for i in range(n)]
-    heapq.heapify(heap)
-    waiting: List[int] = []     # SSP-suspended workers
-
-    def maybe_eval(now):
-        nonlocal evaluated_epochs
-        while min(epoch_done) > evaluated_epochs:
-            evaluated_epochs += 1
-            rec = {"epoch": evaluated_epochs, "sim_time": now}
-            if eval_fn is not None:
-                rec.update(eval_fn(global_params))
-            history.append(rec)
-
-    def min_active_iters() -> int:
-        """Finished workers must not gate SSP progress."""
-        active = [done_iters[i] for i in range(n)
-                  if done_iters[i] < total_iters[i]]
-        return min(active) if active else max(done_iters)
-
-    while heap or waiting:
-        if not heap:   # all runnable workers suspended -> release slowest set
-            raise RuntimeError("SSP deadlock (all workers waiting)")
-        now, wid = heapq.heappop(heap)
-        sim_time = max(sim_time, now)
-        w = workers[wid]
-
-        # SSP gate: a worker may run iteration t only if t - min_iters <= s
-        if done_iters[wid] - min_active_iters() > staleness:
-            waiting.append(wid)
-            # it will be re-queued when the slowest worker advances
-            continue
-
-        # pull -> local train -> push (factor-scaled)
-        rng, sub = jax.random.split(rng)
-        epoch_i = done_iters[wid] // w.iters_per_epoch
-        lr = lr_for_epoch(min(epoch_i, epochs - 1))
-        batch = data_fn(sub, wid, w.batch_size)
-        delta, velocity[wid] = local_update(global_params, velocity[wid],
-                                            batch, lr)
-        global_params = apply_push(global_params, delta, w.update_factor)
-
-        done_iters[wid] += 1
-        if done_iters[wid] % w.iters_per_epoch == 0:
-            epoch_done[wid] += 1
-            maybe_eval(now)
-
-        if done_iters[wid] < total_iters[wid]:
-            heapq.heappush(heap, (now + w.iter_time, wid))
-
-        # release SSP-waiting workers whose gap closed
-        still = []
-        for v in waiting:
-            if done_iters[v] - min_active_iters() <= staleness:
-                heapq.heappush(heap, (max(now, sim_time)
-                                      + 1e-9, v))
-            else:
-                still.append(v)
-        waiting = still
-
-    maybe_eval(sim_time)
-    return SimResult(sim_time=sim_time, history=history,
-                     params=global_params)
+__all__ = [
+    "SimResult", "simulate", "WorkerSpec", "ClusterEvent",
+    "workers_from_plan", "SyncPolicy", "BSP", "ASP", "SSP", "as_policy",
+]

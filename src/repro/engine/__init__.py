@@ -7,8 +7,12 @@
 
 The three paper schemes are phase lists (baseline: one unweighted phase;
 dbl: one phase with a solved layout; hybrid: ``hybrid_schedule`` mapped via
-``phases_from_hybrid``), all driven by the same engine.
+``phases_from_hybrid``), all driven by the same engine.  Both execution
+paths — the PS simulator and the SPMD engine — implement the
+``repro.cluster.Backend`` protocol; ``run_sim`` is the sim front-end and
+``SpmdBackend`` wraps ``TrainEngine`` for the compiled path.
 """
+from repro.cluster.backend import PsSimBackend, RunResult, SpmdBackend
 from repro.engine.engine import StepKey, TrainEngine
 from repro.engine.phases import Phase, phases_from_hybrid, single_phase
 from repro.engine.sim import run_sim, scaled_time_model
@@ -19,5 +23,6 @@ __all__ = [
     "Phase", "single_phase", "phases_from_hybrid",
     "TrainEngine", "StepKey",
     "run_sim", "scaled_time_model",
+    "PsSimBackend", "SpmdBackend", "RunResult",
     "make_weighted_step", "make_micro_step", "make_fused_dbl_step",
 ]

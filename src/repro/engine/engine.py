@@ -137,18 +137,25 @@ class TrainEngine:
     def run(self, phases: Sequence[Phase], params, opt_state,
             batch_fn: Callable[[Phase, int], dict], *,
             seed: int = 0, log_every: int = 20,
-            log_fn: Optional[Callable[[dict], None]] = None):
+            log_fn: Optional[Callable[[dict], None]] = None,
+            start_step: int = 0, start_samples: int = 0,
+            wall_offset: float = 0.0):
         """Run the whole schedule.
 
         batch_fn(phase, global_step) -> batch dict ("tokens"/"labels" or
         "images"/"labels"); the engine attaches the phase layout's weights.
+        ``start_step`` offsets the global step counter (and therefore the
+        dropout RNG stream and ``batch_fn`` indices) so a backend resuming
+        mid-schedule replays the uninterrupted run exactly;
+        ``start_samples``/``wall_offset`` keep the logged ``tokens`` and
+        ``wall_s`` counters cumulative under phase-at-a-time dispatch.
         Returns (params, opt_state, history).
         """
         history = []
         rng = jax.random.PRNGKey(seed)
         t0 = time.time()
-        gstep = 0
-        samples_seen = 0
+        gstep = start_step
+        samples_seen = start_samples
         placed = None
         for pi, phase in enumerate(phases):
             step = self.step_fn(phase)
@@ -182,13 +189,14 @@ class TrainEngine:
                                                   phase.lr, drop_rng)
                 gstep += 1
                 samples_seen += phase.batch_size * phase.input_size
-                if gstep == 1 or gstep % log_every == 0:
+                if gstep == start_step + 1 or gstep % log_every == 0:
                     rec = {"step": gstep, "phase": pi,
                            "size": phase.input_size,
                            "batch": phase.batch_size,
                            "loss": round(float(metrics["loss"]), 4),
                            "tokens": samples_seen,
-                           "wall_s": round(time.time() - t0, 1),
+                           "wall_s": round(time.time() - t0 + wall_offset,
+                                           1),
                            "compiled": self.cache_size}
                     history.append(rec)
                     if log_fn is not None:

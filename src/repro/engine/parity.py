@@ -1,6 +1,6 @@
 """PS-sim ↔ SPMD parity check (DESIGN §3/§4 invariant, executable form).
 
-Two assertions on a tiny model:
+Three assertions on a tiny model:
 
 1. **Factor-scaled merge parity** — the engine's weighted-SPMD step equals
    the parameter-server simulator's factor-scaled merge.  Each sim worker
@@ -16,6 +16,12 @@ Two assertions on a tiny model:
 2. **Fused-kernel parity** — the Pallas ``dbl_merge`` hot-path step equals
    the unfused reference server update  w' = w − lr(g_L + f·g_S)/(1+f).
 
+3. **Backend parity** — the SAME ``Phase`` list run through the two cluster
+   backends agrees: ``PsSimBackend`` (BSP, single worker, factor 1.0,
+   momentum 0) and ``SpmdBackend`` (weighted step, trivial layout, plain
+   SGD) consume an identical batch stream and must land on matching final
+   params within fp32 tolerance.
+
 Run directly:  PYTHONPATH=src python -m repro.engine.parity
 """
 from __future__ import annotations
@@ -25,9 +31,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import models
+from repro.cluster import BSP, PsSimBackend, SpmdBackend
 from repro.configs import get_config, reduced
 from repro.core import (LinearTimeModel, WorkerSpec, simulate, solve_plan)
 from repro.core.spmd_dual_batch import SpmdDualBatch
+from repro.engine.engine import TrainEngine
+from repro.engine.phases import single_phase
 from repro.engine.steps import make_fused_dbl_step, make_weighted_step
 from repro.optim import sgd_momentum
 
@@ -113,10 +122,69 @@ def check_fused_parity(*, seed: int = 0, lr: float = 0.05,
     return {"max_param_diff": diff, "loss": float(m_f["loss"])}
 
 
+def check_backend_parity(*, seed: int = 0, lr: float = 0.05,
+                         atol: float = 2e-5) -> dict:
+    """One schedule, two backends: PsSimBackend (BSP, 1 worker, factor 1.0,
+    momentum 0) vs SpmdBackend (weighted step, plain SGD) on an identical
+    batch stream -> matching final params."""
+    cfg, params, _ = _tiny_setup(seed)
+    tm = LinearTimeModel(a=1.0, b=24.6)
+    # one large worker, factor 1.0, exactly 1 iteration per epoch (d == B_L)
+    plan = solve_plan(tm, B_L=8, d=8, n_workers=1, n_small=0, k=1.0)
+    keys = jax.random.split(jax.random.PRNGKey(seed + 2), 4)
+    batches = [{"tokens": (t := jax.random.randint(k, (8, 16), 0,
+                                                   cfg.vocab_size)),
+                "labels": t} for k in keys]
+    phases = single_phase(input_size=16, n_steps=2, lr=lr, batch_size=8,
+                          plan=plan, epochs=2) \
+        + single_phase(input_size=16, n_steps=2, lr=lr / 5, batch_size=8,
+                       plan=plan, epochs=2)
+
+    # --- PS-sim backend: sequential BSP iterations over the batch stream --
+    counter = {"i": 0}
+
+    def fns_factory(input_size):
+        def grad_fn(p, b):
+            return jax.grad(lambda pp: models.loss_fn(pp, cfg, b)[0])(p)
+
+        def data_fn(key, wid, bsz):
+            b = batches[counter["i"]]
+            counter["i"] += 1
+            return b
+        return grad_fn, data_fn, None
+
+    sim_backend = PsSimBackend(fns_factory, tm=tm, sync=BSP(), momentum=0.0)
+    res_sim = sim_backend.run(phases, jax.tree_util.tree_map(jnp.copy,
+                                                             params),
+                              seed=seed)
+
+    # --- SPMD backend: same stream by global step index -------------------
+    engine = TrainEngine(cfg, sgd_momentum(0.0))
+    spmd_backend = SpmdBackend(engine, lambda phase, gstep: batches[gstep])
+    res_spmd = spmd_backend.run(phases, jax.tree_util.tree_map(jnp.copy,
+                                                               params),
+                                seed=seed)
+
+    diff = max(float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                     - b.astype(jnp.float32))))
+               for a, b in zip(jax.tree_util.tree_leaves(res_sim.params),
+                               jax.tree_util.tree_leaves(res_spmd.params)))
+    assert diff < atol, (
+        f"PsSimBackend and SpmdBackend diverge on the same schedule: "
+        f"{diff} >= {atol}")
+    # unified per-phase records line up (same work per phase)
+    assert [r["steps"] for r in res_sim.phases] \
+        == [r["steps"] for r in res_spmd.phases] == [2, 2]
+    assert [r["phase"] for r in res_sim.phases] == [0, 1]
+    return {"max_param_diff": diff, "sim_time": res_sim.time,
+            "spmd_steps": sum(r["steps"] for r in res_spmd.phases)}
+
+
 def check_parity(*, seed: int = 0) -> dict:
-    """Run both checks; raises AssertionError on any mismatch."""
+    """Run all checks; raises AssertionError on any mismatch."""
     return {"merge": check_merge_parity(seed=seed),
-            "fused": check_fused_parity(seed=seed)}
+            "fused": check_fused_parity(seed=seed),
+            "backend": check_backend_parity(seed=seed)}
 
 
 if __name__ == "__main__":

@@ -13,7 +13,7 @@ schemes reduce to phase lists:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Sequence, Tuple
+from typing import Callable, Optional, Sequence, Tuple
 
 from repro.core.dual_batch import DualBatchPlan
 from repro.core.hybrid import HybridPhase
@@ -33,18 +33,24 @@ class Phase:
     plan: Optional[DualBatchPlan] = None  # None => unweighted baseline
     layout: Optional[SpmdDualBatch] = None
     micro_steps: int = 0                  # >0 => micro-update mode
+    # real per-epoch LR schedule for the PS-sim backend (epoch -> lr);
+    # None => constant `lr`.  SPMD steps always use `lr` (they have no
+    # epoch clock — schedules map onto phases there).
+    lr_for_epoch: Optional[Callable[[int], float]] = None
 
 
 def single_phase(*, input_size: int, n_steps: int, lr: float,
                  batch_size: int, plan: Optional[DualBatchPlan] = None,
-                 dropout: float = 0.0, micro_steps: int = 0,
-                 epochs: int = 0) -> Tuple[Phase, ...]:
+                 dropout: float = 0.0, micro_steps: int = 0, epochs: int = 0,
+                 lr_for_epoch: Optional[Callable[[int], float]] = None,
+                 ) -> Tuple[Phase, ...]:
     """baseline (plan=None) or dual-batch (plan given) as a 1-phase schedule."""
     layout = (layout_from_plan(plan, batch_size)
               if plan is not None and plan.n_small else None)
     return (Phase(input_size=input_size, n_steps=n_steps, lr=lr,
                   batch_size=batch_size, dropout=dropout, epochs=epochs,
-                  plan=plan, layout=layout, micro_steps=micro_steps),)
+                  plan=plan, layout=layout, micro_steps=micro_steps,
+                  lr_for_epoch=lr_for_epoch),)
 
 
 def phases_from_hybrid(hybrid_phases: Sequence[HybridPhase], *,

@@ -1,57 +1,39 @@
-"""Phase schedules on the event-driven PS simulator (faithful form).
+"""Phase schedules on the event-driven PS simulator — thin front-end over
+``repro.cluster.PsSimBackend``.
 
 The same ``Phase`` list that drives the SPMD engine drives the simulator:
 each phase becomes one ``simulate()`` run with workers from its dual-batch
 plan under the phase's input-size-rescaled time model, params carrying
-across phases.  This is the engine-side replacement for the ad-hoc
-lr × input-size double loops the examples/benchmarks used to hand-roll.
+across phases.  ``run_sim`` returns the backend's ``RunResult`` — the full
+concatenated cross-phase history (absolute sim-time offsets, cumulative
+epoch numbering) plus unified per-phase records, not just the last eval.
 """
 from __future__ import annotations
 
 from typing import Callable, Optional, Sequence
 
-from repro.core.param_server import simulate, workers_from_plan
+from repro.cluster.backend import PsSimBackend, RunResult, scaled_time_model
 from repro.core.time_model import LinearTimeModel
 from repro.engine.phases import Phase
 
-
-def scaled_time_model(tm: LinearTimeModel, input_size: int, ref_size: int,
-                      *, axis: str = "resolution") -> LinearTimeModel:
-    """Per-sample cost scales with the input cost (r² or s); overhead b is
-    size-independent (paper §4.2)."""
-    scale = ((input_size / ref_size) ** 2 if axis == "resolution"
-             else input_size / ref_size)
-    return LinearTimeModel(a=tm.a * scale, b=tm.b)
+__all__ = ["run_sim", "scaled_time_model"]
 
 
 def run_sim(phases: Sequence[Phase], init_params, fns_factory: Callable, *,
             tm: LinearTimeModel, axis: str = "resolution",
-            sync: str = "asp", momentum: float = 0.9, seed: int = 0,
-            ref_size: Optional[int] = None):
-    """Run a phase schedule on the simulator.
+            sync="asp", momentum: float = 0.9, seed: int = 0,
+            ref_size: Optional[int] = None, jitter=0.0,
+            ckpt_dir: Optional[str] = None,
+            resume: bool = False) -> RunResult:
+    """Run a phase schedule on the PS-sim backend.
 
-    fns_factory(input_size) -> (grad_fn, data_fn, eval_fn) at that size.
-    Returns (params, total_sim_time, last_eval_record).
+    fns_factory(input_size) -> (grad_fn, data_fn, eval_fn) at that size
+    (memoized per size by the backend).  ``sync`` takes a ``SyncPolicy``
+    or the legacy string spelling.  Returns the backend ``RunResult``
+    (``.params``, ``.time``, ``.history``, ``.phases``, ``.last``).
     """
-    if ref_size is None:
-        ref_size = max(p.input_size for p in phases)
-    params = init_params
-    sim_time = 0.0
-    last: dict = {}
-    for phase in phases:
-        if phase.plan is None:
-            raise ValueError("simulator phases need a dual-batch plan "
-                             "(n_small=0 plans model the baseline)")
-        tm_sub = scaled_time_model(tm, phase.input_size, ref_size, axis=axis)
-        workers = workers_from_plan(phase.plan, tm_sub)
-        grad_fn, data_fn, eval_fn = fns_factory(phase.input_size)
-        res = simulate(params, grad_fn, data_fn, workers,
-                       epochs=max(1, phase.epochs),
-                       lr_for_epoch=lambda e, lr=phase.lr: lr,
-                       sync=sync, momentum=momentum, eval_fn=eval_fn,
-                       seed=seed)
-        params = res.params
-        sim_time += res.sim_time
-        if res.history:
-            last = res.history[-1]
-    return params, sim_time, last
+    backend = PsSimBackend(fns_factory, tm=tm, axis=axis, sync=sync,
+                           momentum=momentum, ref_size=ref_size,
+                           jitter=jitter)
+    return backend.run(phases, init_params, seed=seed, ckpt_dir=ckpt_dir,
+                       resume=resume)

@@ -27,11 +27,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import models
-from repro.checkpoint import save_checkpoint
+from repro.cluster import phase_seed
 from repro.configs import ARCH_IDS, get_config, reduced
 from repro.core import LinearTimeModel, hybrid_schedule, solve_plan
 from repro.data import SyntheticTokens
-from repro.engine import TrainEngine, phases_from_hybrid, single_phase
+from repro.engine import (SpmdBackend, TrainEngine, phases_from_hybrid,
+                          single_phase)
 from repro.optim import make_optimizer
 
 
@@ -83,15 +84,20 @@ def run(argv=None):
     ap.add_argument("--no-fused-merge", dest="fused", action="store_false",
                     default=True,
                     help="unfused server update (dual-batch SGD path)")
-    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--ckpt", default="",
+                    help="checkpoint dir; saves at every phase boundary")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest phase-boundary checkpoint "
+                         "in --ckpt")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.resume and not args.ckpt:
+        ap.error("--resume requires --ckpt (the directory to resume from)")
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
     data = SyntheticTokens(vocab=min(cfg.vocab_size, 256), seed=args.seed)
-    rng_np = np.random.RandomState(args.seed)
     params = models.init_params(cfg, jax.random.PRNGKey(args.seed))
 
     phases = build_phases(args)
@@ -115,21 +121,27 @@ def run(argv=None):
                          fused_merge=("auto" if args.fused else False))
 
     def batch_fn(phase, gstep):
-        b = data.batch(rng_np, phase.batch_size, phase.input_size)
+        # stateless in gstep so a phase-boundary resume replays the
+        # uninterrupted run's batch stream exactly (same mixer as the
+        # backends' per-phase streams)
+        rng = np.random.RandomState(phase_seed(args.seed, gstep))
+        b = data.batch(rng, phase.batch_size, phase.input_size)
         return {"tokens": jnp.asarray(b["tokens"] % cfg.vocab_size),
                 "labels": jnp.asarray(b["labels"] % cfg.vocab_size)}
 
     def log_fn(rec):
         print(json.dumps(_to_cli_rec(rec)))
 
-    params, opt_state, hist = engine.run(phases, params, opt_state,
-                                         batch_fn, seed=args.seed,
-                                         log_fn=log_fn)
-    history = [_to_cli_rec(r) for r in hist]
+    backend = SpmdBackend(engine, batch_fn)
+    res = backend.run(phases, params, opt_state=opt_state, seed=args.seed,
+                      ckpt_dir=args.ckpt or None, resume=args.resume,
+                      log_fn=log_fn)
+    history = [_to_cli_rec(r) for r in res.history]
+    if res.resumed_from is not None:
+        print(f"# resumed from phase boundary {res.resumed_from}")
     if args.ckpt:
-        final_step = sum(p.n_steps for p in phases)
-        save_checkpoint(args.ckpt, final_step, params)
-        print(f"saved checkpoint at step {final_step} -> {args.ckpt}")
+        print(f"saved {len(phases) - (res.resumed_from or 0)} phase-boundary "
+              f"checkpoint(s) -> {args.ckpt}")
     return history
 
 

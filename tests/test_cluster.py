@@ -1,0 +1,244 @@
+"""Cluster runtime: sync policies, per-worker time models, straggler
+jitter, elastic membership, and the compiled-update cache."""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster import (ASP, BSP, SSP, ClusterEvent, WorkerSpec,
+                           as_policy, local_update_for, simulate,
+                           workers_from_plan)
+from repro.core.dual_batch import solve_plan
+from repro.core.time_model import LinearTimeModel
+from tests.test_param_server import quad_problem
+
+
+# ---------------------------- sync policies ---------------------------------
+def test_sync_policy_bounds():
+    assert BSP().allows(0, 0) and not BSP().allows(1, 0)
+    assert ASP().allows(10 ** 9, 0)
+    assert SSP(2).allows(2, 0) and not SSP(2).allows(3, 0)
+    assert BSP().bound() == 0 and math.isinf(ASP().bound())
+
+
+def test_as_policy_coercion():
+    assert as_policy("bsp") == BSP()
+    assert as_policy("asp") == ASP()
+    assert as_policy("ssp", staleness=5) == SSP(5)
+    p = SSP(1)
+    assert as_policy(p) is p
+    with pytest.raises(ValueError):
+        as_policy("bulk")
+
+
+# ------------------------- heterogeneous workers ----------------------------
+def test_workers_from_plan_per_worker_time_models():
+    tm = LinearTimeModel(a=0.001, b=0.0246)
+    plan = solve_plan(tm, B_L=64, d=2048, n_workers=4, n_small=2, k=1.05)
+    tms = [LinearTimeModel(a=0.001 * (1 + i), b=0.0246) for i in range(4)]
+    ws = workers_from_plan(plan, tms)
+    assert [w.iter_time for w in ws[:2]] \
+        == [t.batch_time(plan.B_L) for t in tms[:2]]
+    assert [w.iter_time for w in ws[2:]] \
+        == [t.batch_time(plan.B_S) for t in tms[2:]]
+    with pytest.raises(ValueError):
+        workers_from_plan(plan, tms[:2])     # wrong length
+    ws_j = workers_from_plan(plan, tm, jitter=[0.0, 0.1, 0.2, 0.3])
+    assert [w.jitter for w in ws_j] == [0.0, 0.1, 0.2, 0.3]
+
+
+def test_heterogeneous_cluster_slower_worker_dominates_time():
+    """Tula-style heterogeneity: one 3x-slower worker stretches the
+    BSP-ish epoch time accordingly."""
+    init, grad_fn, data_fn, loss = quad_problem()
+    fast = WorkerSpec(8, 32, 1.0, 0.1)
+    slow = WorkerSpec(8, 32, 1.0, 0.3)
+    res_h = simulate(init, grad_fn, data_fn, [fast, slow], epochs=2,
+                     lr_for_epoch=lambda e: 0.02, sync=ASP())
+    res_f = simulate(init, grad_fn, data_fn, [fast, fast], epochs=2,
+                     lr_for_epoch=lambda e: 0.02, sync=ASP())
+    assert res_h.sim_time == pytest.approx(3 * res_f.sim_time, rel=1e-6)
+
+
+# ------------------------------- jitter -------------------------------------
+def test_jitter_perturbs_sim_time_not_work():
+    init, grad_fn, data_fn, loss = quad_problem()
+    base = [WorkerSpec(8, 32, 1.0, 0.1), WorkerSpec(4, 32, 0.8, 0.05)]
+    noisy = [WorkerSpec(8, 32, 1.0, 0.1, 0.5),
+             WorkerSpec(4, 32, 0.8, 0.05, 0.5)]
+    r0 = simulate(init, grad_fn, data_fn, base, epochs=2,
+                  lr_for_epoch=lambda e: 0.02, sync=ASP(), seed=3)
+    r1 = simulate(init, grad_fn, data_fn, noisy, epochs=2,
+                  lr_for_epoch=lambda e: 0.02, sync=ASP(), seed=3)
+    assert r1.sim_time != r0.sim_time      # stragglers move the clock
+    assert r1.n_pushes == r0.n_pushes      # but not the amount of work
+
+
+# --------------------------- elastic events ---------------------------------
+def test_elastic_leave_stops_worker_and_releases_gates():
+    """A departing worker stops pushing, and no longer gates epoch evals
+    (the generalized finished-workers rule)."""
+    log = []
+    init, grad_fn, data_fn, loss = quad_problem(log=log)
+    workers = [WorkerSpec(8, 32, 1.0, 0.1),    # 4 iters/epoch
+               WorkerSpec(8, 32, 1.0, 0.1)]
+    full = simulate(init, grad_fn, data_fn, workers, epochs=4,
+                    lr_for_epoch=lambda e: 0.02, sync=ASP(),
+                    eval_fn=lambda p: {"loss": loss(p)})
+    log.clear()
+    res = simulate(init, grad_fn, data_fn, workers, epochs=4,
+                   lr_for_epoch=lambda e: 0.02, sync=ASP(),
+                   eval_fn=lambda p: {"loss": loss(p)},
+                   events=[ClusterEvent(time=0.45, action="leave",
+                                        worker_id=1)])
+    assert res.n_pushes < full.n_pushes
+    assert log.count(1) == 4               # worker 1 ran only until t=0.45
+    assert log.count(0) == 16              # worker 0 finished its allocation
+    # epoch evals continued after the departure instead of freezing at the
+    # departed worker's last epoch
+    assert len(res.history) == len(full.history) == 4
+
+
+def test_elastic_join_adds_capacity():
+    log = []
+    init, grad_fn, data_fn, loss = quad_problem(log=log)
+    workers = [WorkerSpec(8, 32, 1.0, 0.1)]
+    res = simulate(init, grad_fn, data_fn, workers, epochs=2,
+                   lr_for_epoch=lambda e: 0.02, sync=ASP(),
+                   events=[ClusterEvent(time=0.35, action="join",
+                                        worker=WorkerSpec(8, 32, 0.5, 0.1))])
+    # joiner runs a full allocation starting at t=0.35
+    assert log.count(1) == 2 * 4
+    assert res.n_pushes == 2 * 4 * 2
+    assert res.sim_time == pytest.approx(0.35 + 8 * 0.1, rel=1e-6)
+
+
+def test_join_under_bsp_does_not_stall_cluster():
+    """A joiner enters at the cluster's iteration frontier: under BSP it
+    must not drag min_active_iters to 0 and suspend the existing members
+    while it serially replays from iteration 0."""
+    log = []
+    init, grad_fn, data_fn, loss = quad_problem(log=log)
+    workers = [WorkerSpec(8, 32, 1.0, 0.1),    # 4 iters/epoch x 2 epochs
+               WorkerSpec(8, 32, 1.0, 0.1)]
+    res = simulate(init, grad_fn, data_fn, workers, epochs=2,
+                   lr_for_epoch=lambda e: 0.02, sync=BSP(),
+                   events=[ClusterEvent(time=0.55, action="join",
+                                        worker=WorkerSpec(8, 32, 1.0, 0.1))])
+    assert log.count(2) == 8               # joiner ran its full allocation
+    assert log.count(0) == log.count(1) == 8
+    # the joiner's executions interleave with the existing workers' —
+    # pre-fix, entries after the join were a solid joiner-only block
+    after_join = log[log.index(2):]
+    assert {0, 1} & set(after_join[:4])
+    assert res.n_pushes == 24
+
+
+def test_leave_releases_ssp_waiter():
+    """A departing straggler must release the SSP-suspended fast worker
+    (departed workers no longer count toward min_active_iters)."""
+    log = []
+    init, grad_fn, data_fn, loss = quad_problem(log=log)
+    workers = [WorkerSpec(2, 32, 1.0, 0.01),    # fast: 16 iters/epoch
+               WorkerSpec(16, 32, 1.0, 10.0)]   # straggler: 10s/iter
+    res = simulate(init, grad_fn, data_fn, workers, epochs=2,
+                   lr_for_epoch=lambda e: 0.01, sync=SSP(0),
+                   events=[ClusterEvent(time=5.0, action="leave",
+                                        worker_id=1)])
+    # fast worker was gated behind the straggler, then freed at t=5 and
+    # completed its full 32-iteration allocation
+    assert log.count(0) == 2 * 16
+    assert log.count(1) == 0               # straggler never finished one
+    assert res.sim_time >= 5.0
+
+
+# ------------------------ compiled-update cache -----------------------------
+def test_local_update_cached_per_grad_fn():
+    def gf(p, b):
+        return p
+    assert local_update_for(gf).__wrapped__ \
+        is local_update_for(gf).__wrapped__       # shared compiled inner
+
+    def gf2(p, b):
+        return p
+    assert local_update_for(gf).__wrapped__ \
+        is not local_update_for(gf2).__wrapped__
+
+
+def test_local_update_survives_grad_fn_drop():
+    """The returned callable pins its grad_fn: re-tracing at a new batch
+    shape after the caller dropped every other grad_fn reference must not
+    hit a dead weakref."""
+    import gc
+
+    def make():
+        A = jnp.eye(4)
+        return lambda p, b: {"x": A[: b.shape[0], : p["x"].shape[0]].sum(0)}
+
+    upd = local_update_for(make())
+    gc.collect()
+    p = {"x": jnp.zeros(4)}
+    v = {"x": jnp.zeros(4)}
+    for bsz in (2, 3):                  # second shape forces a re-trace
+        delta, v = upd(p, v, jnp.zeros(bsz, jnp.int32), 0.1, 0.0)
+    assert np.all(np.isfinite(np.asarray(delta["x"])))
+
+
+def test_repeated_simulate_reuses_update():
+    init, grad_fn, data_fn, loss = quad_problem()
+    w = [WorkerSpec(8, 32, 1.0, 0.1)]
+    r1 = simulate(init, grad_fn, data_fn, w, epochs=1,
+                  lr_for_epoch=lambda e: 0.05, sync=BSP())
+    cached = local_update_for(grad_fn)
+    r2 = simulate(init, grad_fn, data_fn, w, epochs=1,
+                  lr_for_epoch=lambda e: 0.05, sync=BSP())
+    assert local_update_for(grad_fn).__wrapped__ \
+        is cached.__wrapped__                      # no rebuild across calls
+    assert np.array_equal(np.asarray(r1.params["x"]),
+                          np.asarray(r2.params["x"]))
+
+
+def test_local_update_cache_evicts_dead_grad_fns():
+    """The cached update must not keep its grad_fn key alive — dropping
+    the last grad_fn reference frees the cache entry (and its executable)."""
+    import gc
+
+    from repro.cluster.simulator import local_update_cache_size
+    before = local_update_cache_size()
+    def make_fn(i):
+        return lambda p, b: (p, i)[0]
+
+    fns = [make_fn(i) for i in range(5)]
+    [local_update_for(f) for f in fns]      # comprehension: no leaked var
+    assert local_update_cache_size() == before + 5
+    del fns
+    gc.collect()
+    assert local_update_cache_size() == before
+
+
+def test_trailing_event_does_not_inflate_clock():
+    """A leave event timestamped after all work completes must not move
+    the reported simulated wall-clock."""
+    init, grad_fn, data_fn, loss = quad_problem()
+    w = [WorkerSpec(8, 32, 1.0, 0.1), WorkerSpec(8, 32, 1.0, 0.1)]
+    base = simulate(init, grad_fn, data_fn, w, epochs=1,
+                    lr_for_epoch=lambda e: 0.02, sync=ASP())
+    res = simulate(init, grad_fn, data_fn, w, epochs=1,
+                   lr_for_epoch=lambda e: 0.02, sync=ASP(),
+                   events=[ClusterEvent(time=1e6, action="leave",
+                                        worker_id=0)])
+    assert res.sim_time == base.sim_time
+
+
+def test_momentum_is_dynamic_not_baked():
+    """momentum is a traced argument of the cached update — two sims with
+    different momentum share the compiled update yet differ numerically."""
+    init, grad_fn, data_fn, loss = quad_problem()
+    w = [WorkerSpec(8, 32, 1.0, 0.1)]
+    r0 = simulate(init, grad_fn, data_fn, w, epochs=2,
+                  lr_for_epoch=lambda e: 0.05, sync=BSP(), momentum=0.0)
+    r9 = simulate(init, grad_fn, data_fn, w, epochs=2,
+                  lr_for_epoch=lambda e: 0.05, sync=BSP(), momentum=0.9)
+    assert not np.array_equal(np.asarray(r0.params["x"]),
+                              np.asarray(r9.params["x"]))

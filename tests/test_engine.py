@@ -138,6 +138,10 @@ def test_ps_sim_spmd_parity():
     rec = check_parity(seed=0)
     assert rec["merge"]["max_param_diff"] < 2e-5
     assert rec["fused"]["max_param_diff"] < 1e-5
+    # same Phase list through PsSimBackend (BSP, 1 worker, factor 1.0) and
+    # SpmdBackend (weighted step, trivial layout) -> matching final params
+    assert rec["backend"]["max_param_diff"] < 2e-5
+    assert rec["backend"]["spmd_steps"] == 4
 
 
 # ------------------------------ micro mode ----------------------------------

@@ -1,18 +1,22 @@
 """Event-driven PS simulator: semantics + the paper's qualitative claims at
-toy scale (real claims validated in benchmarks/)."""
+toy scale (real claims validated in benchmarks/).  Sync semantics are
+``SyncPolicy`` objects (repro.cluster.sync); the legacy string spelling and
+the ``repro.core.param_server`` import path are covered as compat shims."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.param_server import WorkerSpec, simulate, workers_from_plan
+from repro.cluster import ASP, BSP, SSP, WorkerSpec, simulate, workers_from_plan
 from repro.core.dual_batch import solve_plan
 from repro.core.time_model import LinearTimeModel
 
 
-def quad_problem(dim=8, seed=0):
+def quad_problem(dim=8, seed=0, log=None):
     """Strongly convex quadratic: loss = mean((Ax - b)^2); grads are exact.
-    Note the least-squares floor is nonzero (A is 32x8 overdetermined)."""
+    Note the least-squares floor is nonzero (A is 32x8 overdetermined).
+    ``log`` (a list) records the worker id of every iteration in execution
+    order — data_fn runs eagerly per iteration, outside the jit."""
     rng = np.random.RandomState(seed)
     A = jnp.asarray(rng.randn(32, dim) / np.sqrt(dim), jnp.float32)
     target = jnp.asarray(rng.randn(32), jnp.float32)
@@ -27,6 +31,8 @@ def quad_problem(dim=8, seed=0):
         return float(jnp.mean(r * r))
 
     def data_fn(key, wid, bsz):
+        if log is not None:
+            log.append(wid)
         return jax.random.randint(key, (bsz,), 0, 32)
 
     return {"x": jnp.zeros(dim)}, grad_fn, data_fn, loss
@@ -37,10 +43,24 @@ def test_simulated_time_matches_plan():
     tm = LinearTimeModel(a=0.01, b=0.1)
     workers = [WorkerSpec(8, 32, 1.0, tm.batch_time(8)) for _ in range(2)]
     res = simulate(init, grad_fn, data_fn, workers, epochs=2,
-                   lr_for_epoch=lambda e: 0.05, sync="bsp")
+                   lr_for_epoch=lambda e: 0.05, sync=BSP())
     # 2 epochs x ceil(32/8)=4 iters x 0.18s, both workers in parallel
     assert res.sim_time == pytest.approx(2 * 4 * tm.batch_time(8), rel=1e-6)
     assert len(res.history) == 2
+    assert res.n_pushes == 2 * 4 * 2
+
+
+def test_legacy_string_sync_and_import_path():
+    """Compat: "bsp"/"asp"/"ssp" strings and repro.core.param_server."""
+    from repro.core.param_server import simulate as sim2
+    init, grad_fn, data_fn, loss = quad_problem()
+    w = [WorkerSpec(8, 32, 1.0, 0.1)]
+    a = sim2(init, grad_fn, data_fn, w, epochs=1,
+             lr_for_epoch=lambda e: 0.05, sync="bsp")
+    b = simulate(init, grad_fn, data_fn, w, epochs=1,
+                 lr_for_epoch=lambda e: 0.05, sync=BSP())
+    assert np.array_equal(np.asarray(a.params["x"]),
+                          np.asarray(b.params["x"]))
 
 
 def test_asp_converges_on_quadratic():
@@ -52,39 +72,87 @@ def test_asp_converges_on_quadratic():
     # this lr oscillate on the raw quadratic (expected; the paper's setting
     # has per-worker data shards and decaying lr)
     res = simulate(init, grad_fn, data_fn, workers, epochs=40,
-                   lr_for_epoch=lambda e: 0.1, sync="asp", momentum=0.0,
+                   lr_for_epoch=lambda e: 0.1, sync=ASP(), momentum=0.0,
                    eval_fn=lambda p: {"loss": loss(p)})
     # measure suboptimality against the least-squares floor, which is
     # nonzero for the overdetermined system
-    import numpy as _np
-    from tests.test_param_server import quad_problem as _qp
-    rng = _np.random.RandomState(0)
-    A = rng.randn(32, 8) / _np.sqrt(8)
+    rng = np.random.RandomState(0)
+    A = rng.randn(32, 8) / np.sqrt(8)
     b = rng.randn(32)
-    x_opt, *_ = _np.linalg.lstsq(A, b, rcond=None)
-    floor = float(_np.mean((A @ x_opt - b) ** 2))
+    x_opt, *_ = np.linalg.lstsq(A, b, rcond=None)
+    floor = float(np.mean((A @ x_opt - b) ** 2))
     gap0 = res.history[0]["loss"] - floor
     gap1 = res.history[-1]["loss"] - floor
     assert gap1 < 0.5 * gap0, (floor, gap0, gap1)
 
 
-def test_ssp_staleness_bound_respected():
-    """With a fast and a slow worker under SSP(s), the iteration gap at any
-    push must stay <= s + 1."""
+# --------------------------- SSP gate ---------------------------------------
+def _gaps_from_log(log, totals, n):
+    """Reconstruct each iteration's staleness gap (done[wid] - min over
+    active workers' done) from the execution-order worker-id log."""
+    done = [0] * n
     gaps = []
-    init, grad_fn0, data_fn, loss = quad_problem()
-    seen = {"fast": 0, "slow": 0}
+    for wid in log:
+        active = [done[i] for i in range(n) if done[i] < totals[i]]
+        gaps.append(done[wid] - min(active))
+        done[wid] += 1
+    return done, gaps
 
-    def grad_fn(params, batch):
-        return grad_fn0(params, batch)
 
-    tm = LinearTimeModel(a=0.001, b=0.01)
-    workers = [WorkerSpec(2, 32, 1.0, 0.01),    # fast: 16 iters/epoch
-               WorkerSpec(16, 32, 1.0, 0.2)]    # slow: 2 iters/epoch
+def test_ssp_gate_bounds_staleness_and_releases():
+    """Fast + slow worker under SSP(s): every executed iteration respects
+    the gap bound, the fast worker actually hits it (the suspend path ran),
+    and it is later released to finish its full allocation."""
     for s in (0, 2):
+        log = []
+        init, grad_fn, data_fn, loss = quad_problem(log=log)
+        workers = [WorkerSpec(2, 32, 1.0, 0.01),   # fast: 16 iters/epoch
+                   WorkerSpec(16, 32, 1.0, 0.2)]   # slow: 2 iters/epoch
+        totals = [2 * w.iters_per_epoch for w in workers]
         res = simulate(init, grad_fn, data_fn, workers, epochs=2,
-                       lr_for_epoch=lambda e: 0.01, sync="ssp", staleness=s)
-        assert res.sim_time > 0
+                       lr_for_epoch=lambda e: 0.01, sync=SSP(s))
+        done, gaps = _gaps_from_log(log, totals, 2)
+        assert max(gaps) <= s          # gate respected at every execution
+        assert max(gaps) == s          # bound actually reached -> suspended
+        assert done == totals          # released workers finished everything
+        assert res.n_pushes == sum(totals)
+
+
+def test_finished_workers_do_not_gate_ssp():
+    """A worker that exhausted its allocation must not freeze the others:
+    under SSP(0) the long worker keeps executing after the short worker
+    finishes, far beyond the short worker's final iteration count."""
+    log = []
+    init, grad_fn, data_fn, loss = quad_problem(log=log)
+    workers = [WorkerSpec(2, 32, 1.0, 0.01),    # 16 iters/epoch x 2 epochs
+               WorkerSpec(16, 32, 1.0, 0.01)]   # 2 iters/epoch x 2 epochs
+    totals = [2 * w.iters_per_epoch for w in workers]
+    res = simulate(init, grad_fn, data_fn, workers, epochs=2,
+                   lr_for_epoch=lambda e: 0.01, sync=SSP(0))
+    done, _ = _gaps_from_log(log, totals, 2)
+    assert done == totals              # no deadlock after worker 1 finished
+    assert done[0] > done[1]           # worker 0 ran on past the finisher
+    assert res.sim_time > 0
+
+
+def test_sim_deterministic_across_repeated_runs():
+    """Identical SimResult across repeated runs with the same seed — incl.
+    jitter draws — and a different stream under a different seed."""
+    def one(seed):
+        init, grad_fn, data_fn, loss = quad_problem()
+        workers = [WorkerSpec(8, 32, 1.0, 0.1, 0.3),
+                   WorkerSpec(4, 32, 0.8, 0.05, 0.3)]
+        return simulate(init, grad_fn, data_fn, workers, epochs=3,
+                        lr_for_epoch=lambda e: 0.02, sync=SSP(2),
+                        eval_fn=lambda p: {"loss": loss(p)}, seed=seed)
+
+    a, b, c = one(0), one(0), one(7)
+    assert a.sim_time == b.sim_time
+    assert a.n_pushes == b.n_pushes
+    assert a.history == b.history
+    assert np.array_equal(np.asarray(a.params["x"]),
+                          np.asarray(b.params["x"]))
+    assert a.sim_time != c.sim_time    # jitter stream depends on the seed
 
 
 def test_workers_from_plan_layout():
@@ -102,9 +170,9 @@ def test_update_factor_scales_contributions():
     init, grad_fn, data_fn, loss = quad_problem()
     w0 = [WorkerSpec(8, 32, 0.0, 0.1)]
     res0 = simulate(init, grad_fn, data_fn, w0, epochs=2,
-                    lr_for_epoch=lambda e: 0.05, sync="asp")
+                    lr_for_epoch=lambda e: 0.05, sync=ASP())
     assert float(jnp.max(jnp.abs(res0.params["x"]))) == 0.0
     w1 = [WorkerSpec(8, 32, 1.0, 0.1)]
     res1 = simulate(init, grad_fn, data_fn, w1, epochs=2,
-                    lr_for_epoch=lambda e: 0.05, sync="asp")
+                    lr_for_epoch=lambda e: 0.05, sync=ASP())
     assert float(jnp.max(jnp.abs(res1.params["x"]))) > 0.0
