@@ -18,6 +18,17 @@ Comparison rules:
   * ratio/accuracy/derived rows and rows missing from either side are
     reported but never fail the gate (benches evolve);
   * no baseline found -> exit 0 with a note (first-PR bootstrap).
+
+Directional gates (baseline-free — they compare rows WITHIN one fresh run,
+so a fused-path regression can never land silently just because the
+baseline moved):
+  * ``engine/dbl_merge_speedup >= 1.0`` — the fused flat-store server
+    update must beat the unfused sequence, full stop;
+  * ``engine/step_fused_us <= engine/step_unfused_us * (1 + --step-tol)``
+    — the scan-compiled hot path must not lose to the per-step fallback
+    (small tolerance for shared-runner timing noise; default 10%).
+Run them alone (hard CI step) with ``--directional-only``; the baseline
+comparison above stays informative on shared runners.
 """
 from __future__ import annotations
 
@@ -29,6 +40,35 @@ import os
 import sys
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def check_directional(rows: dict, *, step_tol: float = 0.10) -> list:
+    """Baseline-free directional assertions on one run's rows; returns the
+    list of violated assertions (rows absent -> noted, not failed)."""
+    failures = []
+    sp = rows.get("engine/dbl_merge_speedup")
+    if sp is None:
+        print("  directional: engine/dbl_merge_speedup missing (not run)")
+    elif sp < 1.0:
+        failures.append(
+            f"engine/dbl_merge_speedup={sp:.3f} < 1.0 — the fused "
+            "dbl_merge server update lost to the unfused sequence")
+    else:
+        print(f"  directional ok: engine/dbl_merge_speedup={sp:.3f} >= 1.0")
+    f_us = rows.get("engine/step_fused_us")
+    u_us = rows.get("engine/step_unfused_us")
+    if f_us is None or u_us is None:
+        print("  directional: engine/step_{fused,unfused}_us missing "
+              "(not run)")
+    elif f_us > u_us * (1.0 + step_tol):
+        failures.append(
+            f"engine/step_fused_us={f_us:.1f} > "
+            f"{u_us:.1f} * {1 + step_tol:.2f} — the scan-compiled fused "
+            "step lost to the per-step unfused fallback")
+    else:
+        print(f"  directional ok: engine/step_fused_us={f_us:.1f} <= "
+              f"step_unfused_us={u_us:.1f} (+{step_tol * 100:.0f}% tol)")
+    return failures
 
 
 def parse_csv(path: str) -> dict:
@@ -76,6 +116,10 @@ def main(argv=None) -> int:
                     help="ignore rows faster than this (noise floor)")
     ap.add_argument("--write-baseline", action="store_true",
                     help="write BENCH_<date>.json from the CSV and exit 0")
+    ap.add_argument("--directional-only", action="store_true",
+                    help="only run the baseline-free directional gates")
+    ap.add_argument("--step-tol", type=float, default=0.10,
+                    help="noise tolerance for step_fused <= step_unfused")
     args = ap.parse_args(argv)
 
     if not os.path.exists(args.csv):
@@ -87,6 +131,16 @@ def main(argv=None) -> int:
         print(f"check_regression: no parsable rows in {args.csv}",
               file=sys.stderr)
         return 2
+
+    if args.directional_only:
+        fails = check_directional(fresh, step_tol=args.step_tol)
+        for msg in fails:
+            print(f"check_regression: DIRECTIONAL FAIL: {msg}",
+                  file=sys.stderr)
+        if fails:
+            return 1
+        print("check_regression: directional gates OK")
+        return 0
 
     if args.write_baseline:
         stamp = datetime.date.today().isoformat()
@@ -127,9 +181,15 @@ def main(argv=None) -> int:
     for n in notes:
         print(n)
 
+    dir_fails = check_directional(fresh, step_tol=args.step_tol)
+    for msg in dir_fails:
+        print(f"check_regression: DIRECTIONAL FAIL: {msg}", file=sys.stderr)
+    failures.extend(dir_fails)
+
     if failures:
-        print(f"check_regression: {len(failures)} hot-path row(s) regressed "
-              f">{args.threshold * 100:.0f}% vs {path}", file=sys.stderr)
+        print(f"check_regression: {len(failures)} failure(s) "
+              f"(regression >{args.threshold * 100:.0f}% vs {path} "
+              f"and/or directional)", file=sys.stderr)
         return 1
     print(f"check_regression: OK vs {os.path.basename(path or '-')}")
     return 0

@@ -13,7 +13,7 @@ from dataclasses import replace
 
 import jax
 import jax.numpy as jnp
-import numpy as np
+
 
 from repro import models
 from repro.cluster import ASP, PsSimBackend
@@ -51,8 +51,10 @@ def make_fns(cfg, data, resolution: int):
     def grad_fn(p, batch):
         return jax.grad(lambda pp: models.loss_fn(pp, cfg, batch)[0])(p)
 
-    def data_fn(key, wid, bsz):
-        idx = np.asarray(jax.random.randint(key, (bsz,), 0, len(data)))
+    def data_fn(rng, wid, bsz):
+        # host-side batch selection (simulator contract): no device dispatch
+        # or sync per event
+        idx = rng.integers(0, len(data), size=bsz)
         b = data.train_batch(idx, resolution)
         return {k: jnp.asarray(v) for k, v in b.items()}
 

@@ -47,8 +47,8 @@ def main():
         def grad_fn(p, batch):
             return jax.grad(lambda pp: models.loss_fn(pp, cfg, batch)[0])(p)
 
-        def data_fn(key, wid, bsz):
-            idx = np.asarray(jax.random.randint(key, (bsz,), 0, len(data)))
+        def data_fn(rng, wid, bsz):
+            idx = rng.integers(0, len(data), size=bsz)
             return {k: jnp.asarray(v)
                     for k, v in data.train_batch(idx, resolution).items()}
         test = {k: jnp.asarray(v) for k, v in

@@ -3,6 +3,12 @@
 Leaves are flattened to 'path/to/leaf' npz entries; structure (incl. lists
 vs dicts and scalar leaf dtypes) is reconstructed from the saved key paths
 against a reference pytree of the same structure.
+
+Flat-store aware: ``repro.core.flat.FlatParams`` nodes anywhere in the
+tree are expanded through their codec before saving and re-packed on load,
+so checkpoints keep the PUBLIC pytree format — a file written from a flat
+store is bit-for-bit identical to one written from the plain pytree, and
+either restores into either representation.
 """
 from __future__ import annotations
 
@@ -13,6 +19,41 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.flat import FlatParams
+
+
+def _is_flat(x) -> bool:
+    return isinstance(x, FlatParams)
+
+
+def _expand_flat(tree, abstract: bool = False):
+    """Replace every FlatParams node by its public pytree.
+
+    ``abstract=True`` expands to ``ShapeDtypeStruct`` leaves instead of
+    running the codec on device — the load path only needs the expanded
+    structure to parse the file, not a parameter-sized unravel."""
+    def conv(l):
+        if not _is_flat(l):
+            return l
+        if abstract:
+            return jax.eval_shape(
+                l.spec.unravel, jax.ShapeDtypeStruct(l.spec.shape,
+                                                     jnp.float32))
+        return l.to_tree()
+    return jax.tree_util.tree_map(conv, tree, is_leaf=_is_flat)
+
+
+def _repack_flat(ref, loaded):
+    """Re-wrap loaded subtrees as FlatParams wherever ``ref`` holds one.
+
+    ``tree_map`` with FlatParams as leaves flattens ``loaded`` up to
+    ``ref``'s structure, so every container type a pytree supports
+    (namedtuples included) round-trips."""
+    return jax.tree_util.tree_map(
+        lambda r, l: FlatParams.from_tree(l, spec=r.spec)
+        if _is_flat(r) else l,
+        ref, loaded, is_leaf=_is_flat)
 
 
 def _flatten(tree) -> dict:
@@ -43,7 +84,7 @@ def save_checkpoint(path: str, step: int, tree: Any) -> str:
     fname = os.path.join(path, f"ckpt_{step:08d}.npz")
     tmp = fname + ".tmp"
     with open(tmp, "wb") as f:
-        np.savez(f, **_flatten(tree))
+        np.savez(f, **_flatten(_expand_flat(tree)))
     os.replace(tmp, fname)
     return fname
 
@@ -72,22 +113,25 @@ def load_checkpoint(path: str, step: int, like: Any) -> Any:
     jax-array references restore as jax arrays (canonicalized dtypes);
     plain numpy references keep their exact numpy dtype — x64 metadata
     leaves (e.g. a backend's cumulative sim clock) must round-trip without
-    a float32 detour.
+    a float32 detour.  ``FlatParams`` references restore through the codec
+    (the file itself always holds the public pytree keys).
     """
+    ref = like
+    like = _expand_flat(like, abstract=True)
     fname = os.path.join(path, f"ckpt_{step:08d}.npz")
     data = np.load(fname)
     paths, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
-    for path_keys, ref in paths:
+    for path_keys, ref_leaf in paths:
         key = "/".join(_key_str(p) for p in path_keys)
         if key not in data:
             raise KeyError(f"checkpoint missing leaf {key!r}")
         arr = data[key]
-        if tuple(arr.shape) != tuple(np.shape(ref)):
+        if tuple(arr.shape) != tuple(np.shape(ref_leaf)):
             raise ValueError(f"shape mismatch for {key}: "
-                             f"{arr.shape} vs {np.shape(ref)}")
-        if isinstance(ref, jax.Array):
-            leaves.append(jnp.asarray(arr, dtype=ref.dtype))
+                             f"{arr.shape} vs {np.shape(ref_leaf)}")
+        if isinstance(ref_leaf, (jax.Array, jax.ShapeDtypeStruct)):
+            leaves.append(jnp.asarray(arr, dtype=ref_leaf.dtype))
         else:
-            leaves.append(arr.astype(np.asarray(ref).dtype))
-    return jax.tree_util.tree_unflatten(treedef, leaves)
+            leaves.append(arr.astype(np.asarray(ref_leaf).dtype))
+    return _repack_flat(ref, jax.tree_util.tree_unflatten(treedef, leaves))

@@ -19,6 +19,11 @@ Both support checkpoint/resume at phase boundaries via ``checkpoint.ckpt``
 (save after each completed phase; ``resume=True`` restarts from the latest
 saved boundary, bit-for-bit on CPU because per-phase RNG streams depend
 only on ``(seed, phase index)``).
+
+Both accept initial params either as the public pytree or as a flat store
+(``repro.core.flat.FlatParams``, e.g. restored from a checkpoint into the
+fused hot path's representation) — flat input is unwrapped through the
+codec at entry, and checkpoints always keep the public pytree format.
 """
 from __future__ import annotations
 
@@ -33,7 +38,13 @@ from repro.checkpoint.ckpt import restore_latest, save_checkpoint
 from repro.cluster.simulator import simulate
 from repro.cluster.sync import SyncPolicy, as_policy
 from repro.cluster.topology import ClusterEvent, workers_from_plan
+from repro.core.flat import FlatParams
 from repro.core.time_model import LinearTimeModel
+
+
+def _as_tree(params):
+    """Accept a flat store anywhere a params pytree is expected."""
+    return params.to_tree() if isinstance(params, FlatParams) else params
 
 
 def scaled_time_model(tm: LinearTimeModel, input_size: int, ref_size: int,
@@ -142,6 +153,7 @@ class PsSimBackend:
     def run(self, phases: Sequence, params, *, opt_state=None, seed: int = 0,
             ckpt_dir: Optional[str] = None,
             resume: bool = False) -> RunResult:
+        params = _as_tree(params)
         ref_size = self.ref_size or max(p.input_size for p in phases)
         like = {"params": params, "clock": np.zeros((), np.float64),
                 "epochs": np.zeros((), np.int64)}
@@ -209,6 +221,7 @@ class SpmdBackend:
             ckpt_dir: Optional[str] = None, resume: bool = False,
             log_every: int = 20,
             log_fn: Optional[Callable[[dict], None]] = None) -> RunResult:
+        params = _as_tree(params)
         if opt_state is None:
             opt_state = self.engine.optimizer.init(params)
         like = {"params": params, "opt_state": opt_state}

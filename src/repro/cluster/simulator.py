@@ -116,7 +116,13 @@ def simulate(init_params, grad_fn: Callable, data_fn: Callable,
     """Run the PS simulation.
 
     grad_fn(params, batch) -> grads (same pytree as params)
-    data_fn(rng_key, worker_id, batch_size) -> batch
+    data_fn(rng, worker_id, batch_size) -> batch, where ``rng`` is a seeded
+      ``numpy.random.Generator`` shared across the run (draw batch indices
+      host-side from it — e.g. ``rng.integers(0, n, size=batch_size)``).
+      Batch selection used to burn one ``jax.random.split`` dispatch plus a
+      device sync per event; the host-side stream keeps the event loop off
+      the device entirely between compiled updates, and stays deterministic
+      under a fixed seed (draws happen in event-execution order).
     eval_fn(params) -> dict of metrics, called at each epoch boundary
       (epoch = when the *slowest* non-departed worker finishes its
       allocation).
@@ -144,7 +150,7 @@ def simulate(init_params, grad_fn: Callable, data_fn: Callable,
         return np.random.RandomState((seed * 1000003 + 7919 * wid) % 2**32)
 
     jit_rngs = [_worker_rng(i) for i in range(n0)]
-    rng = jax.random.PRNGKey(seed)
+    data_rng = np.random.Generator(np.random.PCG64(seed))
     history: List[dict] = []
     sim_time = 0.0
     evaluated_epochs = 0
@@ -256,10 +262,9 @@ def simulate(init_params, grad_fn: Callable, data_fn: Callable,
 
         # pull -> local train -> push (factor-scaled); epoch progress is
         # measured from the worker's own base (joiners start mid-frontier)
-        rng, sub = jax.random.split(rng)
         own_iters = done_iters[wid] - base_iters[wid]
         lr = lr_for_epoch(min(own_iters // w.iters_per_epoch, epochs - 1))
-        batch = data_fn(sub, wid, w.batch_size)
+        batch = data_fn(data_rng, wid, w.batch_size)
         delta, velocity[wid] = local_update(global_params, velocity[wid],
                                             batch, lr, momentum)
         global_params = _apply_push(global_params, delta, w.update_factor)

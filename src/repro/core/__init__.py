@@ -2,6 +2,7 @@
 
 - time_model:      Eq. 2/3 (time) and Eq. 9 (memory) linear models
 - dual_batch:      Eq. 4-8 plan solver + model-update factors
+- flat:            pytree ⇄ flat-buffer codec (the fused hot path's store)
 - progressive:     cyclic progressive learning schedules
 - hybrid:          CPL x DBL composition
 - spmd_dual_batch: synchronous TPU-native dual-batch train step
@@ -11,6 +12,7 @@ package re-exports its core names (lazily — ``repro.cluster`` itself
 imports ``core.time_model``, so an eager import here would be circular).
 """
 from repro.core.dual_batch import DualBatchPlan, plan_table, solve_plan, update_factor
+from repro.core.flat import FlatParams, FlatSpec, flat_spec
 from repro.core.hybrid import HybridPhase, hybrid_schedule, predicted_total_time
 from repro.core.progressive import SubStagePlan, adapt_batch, cyclic_schedule, total_cost
 from repro.core.spmd_dual_batch import (SpmdDualBatch, layout_from_plan,
@@ -29,6 +31,7 @@ def __getattr__(name):
 
 __all__ = [
     "DualBatchPlan", "solve_plan", "plan_table", "update_factor",
+    "FlatParams", "FlatSpec", "flat_spec",
     "HybridPhase", "hybrid_schedule", "predicted_total_time",
     "SimResult", "WorkerSpec", "simulate", "workers_from_plan",
     "SubStagePlan", "adapt_batch", "cyclic_schedule", "total_cost",

@@ -1,0 +1,156 @@
+"""Flat parameter store: the pytree ⇄ flat-buffer codec behind the fused
+server-update hot path.
+
+The paper's §3.4 server update is elementwise over the *whole* parameter
+vector, but parameters live in a pytree — and updating leaf-by-leaf means
+one kernel launch (plus pad/reshape and an HBM round-trip) per leaf, every
+step.  The codec computes the layout ONCE per tree structure — leaf
+offsets, shapes, dtypes, and the lane/sublane-padded 2D buffer shape — so
+the hot loop carries a single ``(rows, LANE)`` float32 buffer:
+
+  * ``FlatSpec.ravel``    pytree -> padded (rows, LANE) f32 buffer
+  * ``FlatSpec.unravel``  buffer -> pytree (original shapes/dtypes)
+  * ``flat_spec(tree)``   cached on (treedef, leaf shapes, leaf dtypes),
+    so repeated calls — every phase, every checkpoint — reuse one spec
+    and the compiled ravel/unravel HLO stays cache-hot.
+
+Gradients w.r.t. the flat buffer come out flat for free: differentiate a
+loss composed with ``unravel`` and autodiff transposes the slicing into
+the concatenation — no explicit per-step ravel of gradient pytrees.
+
+``FlatParams`` wraps (buffer, spec) so flat state can flow through the
+cluster backends and ``checkpoint.ckpt`` while checkpoints keep the
+public pytree format (see ``ckpt._expand_flat``), bit-for-bit with files
+written from plain pytrees.
+
+Float32 is the server-update compute dtype: non-f32 leaves are upcast on
+``ravel`` and cast back on ``unravel`` (f32 leaves round-trip bit-for-bit).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LANE = 128            # VPU lane width — last dim of the flat buffer
+SUBLANE = 8           # f32 sublane tile — row padding granularity
+MAX_WHOLE_ROWS = 2048  # single whole-buffer kernel block up to here (~1MB)
+BLOCK_ROWS = 1024     # grid block height once the buffer exceeds that
+
+
+def padded_rows(n: int) -> int:
+    """Rows of the (rows, LANE) buffer holding ``n`` elements: lane- and
+    sublane-aligned, and block-aligned once large enough that the merge
+    kernel must grid over it (``dbl_merge_flat2d`` picks whole-buffer vs
+    gridded from the same thresholds)."""
+    rows = max(1, -(-n // LANE))
+    rows = -(-rows // SUBLANE) * SUBLANE
+    if rows > MAX_WHOLE_ROWS:
+        rows = -(-rows // BLOCK_ROWS) * BLOCK_ROWS
+    return rows
+
+
+class FlatSpec:
+    """One tree structure's flat layout (offsets/shapes computed once)."""
+
+    def __init__(self, treedef, shapes: Tuple[tuple, ...],
+                 dtypes: Tuple[Any, ...]):
+        self.treedef = treedef
+        self.shapes = tuple(tuple(s) for s in shapes)
+        self.dtypes = tuple(jnp.dtype(d) for d in dtypes)
+        self.sizes = tuple(int(np.prod(s)) if s else 1 for s in self.shapes)
+        offs, off = [], 0
+        for sz in self.sizes:
+            offs.append(off)
+            off += sz
+        self.offsets = tuple(offs)
+        self.n = off                       # live elements
+        self.rows = padded_rows(self.n)
+        self.shape = (self.rows, LANE)     # the buffer shape
+        self.pad = self.rows * LANE - self.n
+        self._ravel_jit = None
+        self._unravel_jit = None
+
+    def __repr__(self):
+        return (f"FlatSpec(n={self.n}, rows={self.rows}, "
+                f"leaves={len(self.sizes)})")
+
+    # -- codec ---------------------------------------------------------
+    def ravel(self, tree):
+        """tree -> (rows, LANE) f32 buffer.  Works for any tree of this
+        structure (params, velocity, gradients) regardless of leaf dtype."""
+        leaves = jax.tree_util.tree_leaves(tree)
+        if len(leaves) != len(self.sizes):
+            raise ValueError(f"tree has {len(leaves)} leaves, spec expects "
+                             f"{len(self.sizes)}")
+        flat = jnp.concatenate(
+            [jnp.asarray(l).reshape(-1).astype(jnp.float32) for l in leaves])
+        if self.pad:
+            flat = jnp.pad(flat, (0, self.pad))
+        return flat.reshape(self.shape)
+
+    def unravel(self, buf):
+        """(rows, LANE) buffer -> tree with the original shapes/dtypes."""
+        flat = buf.reshape(-1)
+        leaves = [
+            jax.lax.slice(flat, (o,), (o + sz,)).reshape(shape).astype(dt)
+            for o, sz, shape, dt in zip(self.offsets, self.sizes,
+                                        self.shapes, self.dtypes)]
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+    # -- compiled codec (phase-boundary entry points) ------------------
+    # eagerly dispatching one op per leaf costs milliseconds on wide trees;
+    # the jitted forms run the whole codec as one executable and are cached
+    # with the spec, so every phase/checkpoint boundary reuses them
+    def ravel_jit(self, tree):
+        if self._ravel_jit is None:
+            self._ravel_jit = jax.jit(self.ravel)
+        return self._ravel_jit(tree)
+
+    def unravel_jit(self, buf):
+        if self._unravel_jit is None:
+            self._unravel_jit = jax.jit(self.unravel)
+        return self._unravel_jit(buf)
+
+
+_SPECS: Dict[tuple, FlatSpec] = {}
+
+
+def flat_spec(tree) -> FlatSpec:
+    """The (cached) ``FlatSpec`` for ``tree``'s structure.  Two trees with
+    equal treedef + leaf shapes/dtypes share one spec object, so codec
+    layout is computed once per phase schedule, not once per step."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = tuple(tuple(np.shape(l)) for l in leaves)
+    dtypes = tuple(str(l.dtype) if hasattr(l, "dtype")
+                   else str(np.asarray(l).dtype) for l in leaves)
+    key = (treedef, shapes, dtypes)
+    spec = _SPECS.get(key)
+    if spec is None:
+        spec = FlatSpec(treedef, shapes, dtypes)
+        _SPECS[key] = spec
+    return spec
+
+
+@dataclass
+class FlatParams:
+    """Parameters living in the flat store: one buffer + its codec.
+
+    The cluster backends accept this in place of a parameter pytree
+    (unwrapped via the codec at entry), and ``checkpoint.ckpt`` saves /
+    restores it through the public pytree format — files are bit-for-bit
+    identical to checkpoints written from the plain pytree.
+    """
+    buf: Any
+    spec: FlatSpec
+
+    @classmethod
+    def from_tree(cls, tree, spec: FlatSpec | None = None) -> "FlatParams":
+        spec = spec or flat_spec(tree)
+        return cls(spec.ravel(tree), spec)
+
+    def to_tree(self):
+        return self.spec.unravel_jit(self.buf)

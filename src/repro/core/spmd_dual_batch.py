@@ -17,13 +17,28 @@ steps inside one global step (lax.scan) before the factor-weighted merge.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Optional
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.dual_batch import DualBatchPlan
 from repro.optim import Optimizer
+
+
+@functools.lru_cache(maxsize=256)
+def _layout_weights(layout: "SpmdDualBatch"):
+    """Per-example weight vector, built host-side and cached on the frozen
+    layout — schedules that revisit a layout (cyclic CPL) reuse one device
+    array instead of re-concatenating per call."""
+    pw = layout.per_worker
+    w = np.ones((layout.n_workers, pw), np.float32)
+    for i in range(layout.n_workers - layout.n_small, layout.n_workers):
+        w[i] = np.where(np.arange(pw) < layout.small_valid,
+                        layout.factor_small, 0.0)
+    return jnp.asarray(w.reshape(-1))
 
 
 @dataclass(frozen=True)
@@ -46,17 +61,9 @@ class SpmdDualBatch:
         return self.global_batch // self.n_workers
 
     def weights(self) -> jnp.ndarray:
-        """(global_batch,) per-example weights (0 = padding)."""
-        pw = self.per_worker
-        w = []
-        for i in range(self.n_workers):
-            small = i >= self.n_workers - self.n_small
-            if small:
-                w.append(jnp.where(jnp.arange(pw) < self.small_valid,
-                                   self.factor_small, 0.0))
-            else:
-                w.append(jnp.ones((pw,), jnp.float32))
-        return jnp.concatenate(w)
+        """(global_batch,) per-example weights (0 = padding); cached on the
+        frozen layout."""
+        return _layout_weights(self)
 
     @property
     def effective_examples(self) -> float:

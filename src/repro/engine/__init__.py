@@ -13,16 +13,19 @@ paths — the PS simulator and the SPMD engine — implement the
 ``SpmdBackend`` wraps ``TrainEngine`` for the compiled path.
 """
 from repro.cluster.backend import PsSimBackend, RunResult, SpmdBackend
+from repro.core.flat import FlatParams, FlatSpec, flat_spec
 from repro.engine.engine import StepKey, TrainEngine
 from repro.engine.phases import Phase, phases_from_hybrid, single_phase
 from repro.engine.sim import run_sim, scaled_time_model
-from repro.engine.steps import (make_fused_dbl_step, make_micro_step,
-                                make_weighted_step)
+from repro.engine.steps import (make_fused_dbl_step, make_fused_phase_scan,
+                                make_micro_step, make_weighted_step)
 
 __all__ = [
     "Phase", "single_phase", "phases_from_hybrid",
     "TrainEngine", "StepKey",
     "run_sim", "scaled_time_model",
     "PsSimBackend", "SpmdBackend", "RunResult",
+    "FlatParams", "FlatSpec", "flat_spec",
     "make_weighted_step", "make_micro_step", "make_fused_dbl_step",
+    "make_fused_phase_scan",
 ]

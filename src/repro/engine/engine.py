@@ -11,11 +11,18 @@ and ``core/spmd_dual_batch.py``:
     (the cyclic part of CPL revisits sizes under every LR stage);
   * buffer donation throughout (params + optimizer state);
   * the fused Pallas ``dbl_merge`` server update on the SGD dual-batch hot
-    path (``interpret=True`` fallback off-TPU, ``fused_merge=False`` to
-    fall back to the unfused scale/add/apply sequence);
+    path, run over the FLAT parameter store (``repro.core.flat``): one
+    kernel launch per step for the whole tree, with the phase's inner loop
+    scan-compiled over pre-stacked batch chunks and a donated
+    ``(params, velocity)`` flat carry — no per-step Python dispatch
+    (``interpret=True`` fallback off-TPU, ``fused_merge=False`` for the
+    unfused scale/add/apply sequence, ``scan_loop=False`` for the
+    step-at-a-time fused path);
   * optional mesh: when given, params / optimizer state / batch shardings
     are derived from ``launch.sharding`` and attached to every compiled
-    step, so the same schedule runs SPMD on the production mesh unchanged.
+    step, so the same schedule runs SPMD on the production mesh unchanged
+    (the scan path is host-loop-free and currently single-device; mesh
+    runs keep the per-step loop).
 """
 from __future__ import annotations
 
@@ -25,10 +32,12 @@ from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core.flat import FlatSpec, flat_spec
 from repro.engine.phases import Phase
-from repro.engine.steps import (make_fused_dbl_step, make_micro_step,
-                                make_weighted_step)
+from repro.engine.steps import (make_fused_dbl_step, make_fused_phase_scan,
+                                make_micro_step, make_weighted_step)
 from repro.optim import Optimizer
 
 
@@ -51,13 +60,29 @@ class TrainEngine:
       the naive scale/add/apply update).
     sgd_server: mark the optimizer as the paper's plain-SGD server update so
       dual-batch phases take the fused kernel path (the optimizer's own
-      update is bypassed there; its state passes through untouched).
+      update is bypassed there; its state passes through untouched unless
+      ``server_momentum`` folds it into the kernel).
+    scan_loop: "auto" (fused phases off-mesh run as one ``lax.scan`` over
+      pre-stacked batch chunks on the flat store), True (same), False
+      (step-at-a-time Python loop on every path).
+    scan_chunk: max steps stacked per compiled scan call (bounds host-side
+      batch staging memory; chunks share one executable per length).
+    server_momentum: fold PS-server momentum into the fused kernel pass
+      (requires an opt_state with a params-shaped ``"v"`` tree, e.g.
+      ``sgd_momentum``; the updated velocity is written back to it).
+      Fused phases only — the constructor rejects configurations where the
+      fused path would bypass the scan (``scan_loop=False``,
+      ``fused_merge=False``, or a mesh), because the per-step loop would
+      silently drop the momentum; non-fused phases keep the optimizer's
+      own update.
     """
 
     def __init__(self, cfg, optimizer: Optimizer, *,
                  fused_merge="auto", sgd_server: bool = False,
                  drop_rate: float = 0.0, mesh=None, donate: bool = True,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 scan_loop="auto", scan_chunk: int = 32,
+                 server_momentum: float = 0.0):
         self.cfg = cfg
         self.optimizer = optimizer
         self.fused_merge = fused_merge
@@ -66,7 +91,19 @@ class TrainEngine:
         self.mesh = mesh
         self.donate = donate
         self.interpret = interpret
+        self.scan_loop = scan_loop
+        self.scan_chunk = int(scan_chunk)
+        self.server_momentum = float(server_momentum)
+        if self.server_momentum > 0 and (scan_loop is False
+                                         or fused_merge is False
+                                         or mesh is not None):
+            # the velocity lives in the scan path's kernel sweep; the
+            # per-step loop would silently train plain SGD instead
+            raise ValueError(
+                "server_momentum requires the fused scan path "
+                "(scan_loop enabled, fused_merge on, no mesh)")
         self._cache: dict = {}
+        self._phase_cache: dict = {}
         self.compile_count = 0
 
     # ------------------------------------------------------------------
@@ -80,6 +117,16 @@ class TrainEngine:
             # fused kernel or the unfused fallback from self.fused_merge
             return "fused"
         return "weighted"
+
+    def _use_scan(self, kind: str) -> bool:
+        """Scan-compile the phase loop?  Only the fused flat-store path is
+        scan-shaped; the unfused fallback and mesh runs keep the per-step
+        loop (the fallback IS the per-step comparison path)."""
+        if kind != "fused" or self.mesh is not None:
+            return False
+        if self.fused_merge is False or self.scan_loop is False:
+            return False
+        return True
 
     def _drop_rate_for(self, phase: Phase) -> float:
         """Per-phase dropout (CPL sub-stage schedule) wins over the engine
@@ -97,7 +144,8 @@ class TrainEngine:
             fn = make_fused_dbl_step(self.cfg, key.layout,
                                      drop_rate=key.drop_rate,
                                      fused=self.fused_merge is not False,
-                                     interpret=self.interpret)
+                                     interpret=self.interpret,
+                                     leafwise=self.mesh is not None)
             static, donate = (3,), (0, 1)     # lr baked into the kernel
         else:
             fn = make_weighted_step(self.cfg, self.optimizer,
@@ -120,9 +168,40 @@ class TrainEngine:
             self._cache[key] = self._build(key)
         return self._cache[key]
 
+    def phase_fn(self, phase: Phase, spec: FlatSpec, chunk: int):
+        """Compiled whole-chunk scan for a fused phase (cached on the step
+        key + lr + codec spec + chunk length; same-shaped phases at the
+        same lr share one executable)."""
+        key = StepKey(phase.input_size, phase.batch_size, phase.layout,
+                      phase.micro_steps, "fused",
+                      self._drop_rate_for(phase))
+        ck = (key, float(phase.lr), id(spec), chunk)
+        if ck not in self._phase_cache:
+            fn = make_fused_phase_scan(self.cfg, phase.layout, spec,
+                                       lr=phase.lr,
+                                       drop_rate=key.drop_rate,
+                                       momentum=self.server_momentum,
+                                       interpret=self.interpret)
+            kw = {"donate_argnums": (0, 1)} if self.donate else {}
+            self._phase_cache[ck] = jax.jit(fn, **kw)
+            self.compile_count += 1
+        return self._phase_cache[ck]
+
     @property
     def cache_size(self) -> int:
-        return len(self._cache)
+        return len(self._cache) + len(self._phase_cache)
+
+    def _record(self, history, log_fn, *, gstep: int, pi: int, phase: Phase,
+                loss, samples_seen: int, t0: float, wall_offset: float):
+        """The per-step history record — one schema for both loop forms."""
+        rec = {"step": gstep, "phase": pi, "size": phase.input_size,
+               "batch": phase.batch_size, "loss": round(float(loss), 4),
+               "tokens": samples_seen,
+               "wall_s": round(time.time() - t0 + wall_offset, 1),
+               "compiled": self.cache_size}
+        history.append(rec)
+        if log_fn is not None:
+            log_fn(rec)
 
     # ------------------------------------------------------------------
     def _shardings(self, params, opt_state, batch):
@@ -133,6 +212,49 @@ class TrainEngine:
         return (sh(param_specs(params, self.mesh)),
                 sh(param_specs(opt_state, self.mesh)),
                 sh(batch_specs(batch, self.mesh)))
+
+    # ------------------------------------------------------------------
+    def _run_phase_scan(self, phase: Phase, pi: int, spec: FlatSpec, p2, v2,
+                        batch_fn, rng, *, gstep: int, samples_seen: int,
+                        start_step: int, log_every: int, log_fn, history,
+                        t0: float, wall_offset: float):
+        """One fused phase as scan-compiled chunks on the flat store.
+
+        Takes and returns the flat ``(p2, v2)`` carry — ``run()`` owns
+        ravel/unravel at the flat↔pytree boundary, so consecutive scan
+        phases share one carry with no interior codec passes.  Drives
+        ``scan_chunk``-step compiled calls over host-pre-stacked batches.
+        Returns (p2, v2, gstep, samples_seen).
+        """
+        drop = self._drop_rate_for(phase)
+        remaining = phase.n_steps
+        while remaining:
+            c = min(remaining, self.scan_chunk)
+            g0 = gstep
+            staged = [batch_fn(phase, g0 + j) for j in range(c)]
+            batches = {}
+            for k in staged[0]:
+                vals = [b[k] for b in staged]
+                # device arrays stack on device; host arrays stack host-side
+                # into ONE upload — neither pays a device->host round trip
+                batches[k] = (jnp.stack(vals)
+                              if isinstance(vals[0], jax.Array)
+                              else jnp.asarray(np.stack(vals)))
+            rngs = (jax.vmap(lambda s: jax.random.fold_in(rng, s))(
+                jnp.arange(g0, g0 + c)) if drop > 0 else None)
+            fn = self.phase_fn(phase, spec, c)
+            p2, v2, losses = fn(p2, v2, batches, rngs)
+            losses = np.asarray(losses)     # one device sync per chunk
+            for j in range(c):
+                gstep += 1
+                samples_seen += phase.batch_size * phase.input_size
+                if gstep == start_step + 1 or gstep % log_every == 0:
+                    self._record(history, log_fn, gstep=gstep, pi=pi,
+                                 phase=phase, loss=losses[j],
+                                 samples_seen=samples_seen, t0=t0,
+                                 wall_offset=wall_offset)
+            remaining -= c
+        return p2, v2, gstep, samples_seen
 
     def run(self, phases: Sequence[Phase], params, opt_state,
             batch_fn: Callable[[Phase, int], dict], *,
@@ -157,7 +279,54 @@ class TrainEngine:
         gstep = start_step
         samples_seen = start_samples
         placed = None
+        mom = self.server_momentum
+        flat = None  # (spec, vspec, p2, v2): params/opt_state stale if set
+
+        def materialize():
+            """Leave the flat store: params/opt_state become current."""
+            nonlocal params, opt_state, flat
+            if flat is not None:
+                spec, vspec, p2, v2 = flat
+                params = spec.unravel_jit(p2)
+                if v2 is not None:
+                    # the velocity's OWN spec — its leaf dtypes may differ
+                    # from the params' (e.g. f32 state over bf16 params)
+                    opt_state = dict(opt_state, v=vspec.unravel_jit(v2))
+                flat = None
+
         for pi, phase in enumerate(phases):
+            kind = self._kind_for(phase)
+            if self._use_scan(kind):
+                if flat is None:
+                    spec = flat_spec(params)
+                    p2 = spec.ravel_jit(params)
+                    vspec = v2 = None
+                    if mom > 0:
+                        if not (isinstance(opt_state, dict)
+                                and "v" in opt_state):
+                            raise ValueError(
+                                "server_momentum needs an opt_state with a "
+                                'params-shaped "v" tree (e.g. sgd_momentum)')
+                        vspec = flat_spec(opt_state["v"])
+                        v2 = vspec.ravel_jit(opt_state["v"])
+                else:
+                    spec, vspec, p2, v2 = flat
+                p2, v2, gstep, samples_seen = self._run_phase_scan(
+                    phase, pi, spec, p2, v2, batch_fn, rng,
+                    gstep=gstep, samples_seen=samples_seen,
+                    start_step=start_step, log_every=log_every,
+                    log_fn=log_fn, history=history, t0=t0,
+                    wall_offset=wall_offset)
+                flat = (spec, vspec, p2, v2)
+                continue
+            if mom > 0:
+                # the non-scan paths never touch the velocity — erroring
+                # beats silently training without the configured momentum
+                raise ValueError(
+                    f"server_momentum is set but phase {pi} ({kind}) "
+                    "bypasses the fused scan path; PS-server momentum only "
+                    "applies to fused dual-batch phases")
+            materialize()
             step = self.step_fn(phase)
             bsh = None
             drop = self._drop_rate_for(phase)
@@ -190,15 +359,9 @@ class TrainEngine:
                 gstep += 1
                 samples_seen += phase.batch_size * phase.input_size
                 if gstep == start_step + 1 or gstep % log_every == 0:
-                    rec = {"step": gstep, "phase": pi,
-                           "size": phase.input_size,
-                           "batch": phase.batch_size,
-                           "loss": round(float(metrics["loss"]), 4),
-                           "tokens": samples_seen,
-                           "wall_s": round(time.time() - t0 + wall_offset,
-                                           1),
-                           "compiled": self.cache_size}
-                    history.append(rec)
-                    if log_fn is not None:
-                        log_fn(rec)
+                    self._record(history, log_fn, gstep=gstep, pi=pi,
+                                 phase=phase, loss=metrics["loss"],
+                                 samples_seen=samples_seen, t0=t0,
+                                 wall_offset=wall_offset)
+        materialize()
         return params, opt_state, history

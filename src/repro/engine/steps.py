@@ -11,12 +11,12 @@ Three step kinds:
                sequential local SGD steps inside one global step (lax.scan)
                before the factor-weighted merge.
   fused_dbl  — the paper §3.4 server update for the SGD dual-batch case,
-               applied by the Pallas ``dbl_merge`` kernel in one VMEM pass:
+               applied by the Pallas ``dbl_merge`` kernel in ONE launch over
+               the whole flat parameter store (``repro.core.flat`` codec):
                w' = w − lr·(g_L + f·g_S)/(1 + f), with g_L/g_S the large and
                small group mean gradients.  ``interpret=True`` on non-TPU
-               backends; ``fused=False`` falls back to the unfused
-               scale/add/apply HLO sequence (same math, three extra
-               parameter-sized HBM round-trips).
+               backends; ``fused=False`` falls back to the XLA-fused
+               reference update (``kernels.ref.dbl_merge_ref``).
 
 All steps share one signature:
 
@@ -24,6 +24,13 @@ All steps share one signature:
 
 ``rng`` is only consumed when ``drop_rate > 0`` (pass None otherwise);
 ``metrics`` always contains "loss".
+
+``make_fused_phase_scan`` is the fused path's WHOLE-PHASE form: the carry
+is the flat ``(params, velocity)`` buffer pair, gradients are taken w.r.t.
+the flat buffer (autodiff transposes the codec's unravel into the ravel —
+no per-step pad/reshape), and a ``lax.scan`` over pre-stacked batches
+compiles the entire inner loop into one executable with exactly one
+``dbl_merge`` launch per server update.
 """
 from __future__ import annotations
 
@@ -66,11 +73,14 @@ def _small_valid_index(layout) -> np.ndarray:
 
 
 def make_fused_dbl_step(cfg, layout, *, drop_rate: float = 0.0,
-                        fused: bool = True, interpret: Optional[bool] = None):
+                        fused: bool = True, interpret: Optional[bool] = None,
+                        leafwise: bool = False):
     """SGD dual-batch step with the fused ``dbl_merge`` parameter update on
     the hot path (paper §3.4).  ``opt_state`` passes through untouched — the
     server update IS the optimizer.  ``fused=False`` selects the unfused
-    reference update (flag for perf comparison / debugging)."""
+    reference update (flag for perf comparison / debugging); ``leafwise``
+    keeps the per-leaf kernel form for mesh-sharded params (the flat-store
+    concat would break their shardings)."""
     from repro.kernels.dbl_merge import dbl_merge_tree
     from repro.kernels.ref import dbl_merge_ref
 
@@ -85,8 +95,7 @@ def make_fused_dbl_step(cfg, layout, *, drop_rate: float = 0.0,
     f = float(layout.factor_small)
 
     def group_grad(params, batch, rows, rng):
-        sub = {k: v[rows] for k, v in batch.items()
-               if k in ("tokens", "labels", "images", "embeddings")}
+        sub = {k: v[rows] for k, v in batch.items() if k in _GROUP_KEYS}
         return jax.value_and_grad(_weighted_loss, has_aux=True)(
             params, cfg, sub, rng, drop_rate)
 
@@ -99,7 +108,8 @@ def make_fused_dbl_step(cfg, layout, *, drop_rate: float = 0.0,
         (loss_s, _), g_small = group_grad(params, batch, small_idx, rng)
         if fused:
             params = dbl_merge_tree(params, g_large, g_small, factor=f,
-                                    lr=lr_f, interpret=interpret)
+                                    lr=lr_f, interpret=interpret,
+                                    leafwise=leafwise)
         else:
             params = jax.tree_util.tree_map(
                 lambda p, gl, gs: dbl_merge_ref(p, gl, gs, factor=f,
@@ -110,6 +120,90 @@ def make_fused_dbl_step(cfg, layout, *, drop_rate: float = 0.0,
                                    "loss_small": loss_s}
 
     return step
+
+
+_GROUP_KEYS = ("tokens", "labels", "images", "embeddings")
+
+
+def make_fused_phase_scan(cfg, layout, spec, *, lr: float,
+                          drop_rate: float = 0.0, momentum: float = 0.0,
+                          interpret: Optional[bool] = None):
+    """The fused dual-batch hot path for a WHOLE phase, scan-compiled.
+
+    Returns ``phase_fn(p2, v2, batches, rngs) -> (p2, v2, losses)``:
+
+      * ``p2`` / ``v2`` — flat ``(rows, LANE)`` f32 param / velocity
+        buffers from ``spec.ravel`` (``v2 = None`` when ``momentum == 0``;
+        the engine jits with both donated, so the server update runs in
+        place across the phase);
+      * ``batches`` — the phase's batches stacked on a leading steps axis;
+      * ``rngs`` — per-step dropout keys stacked likewise (None when
+        ``drop_rate == 0``);
+      * ``losses`` — the per-step merged loss, stacked.
+
+    Per step this does ONE backward pass and ONE kernel launch.  The loss
+    differentiated is the already-merged scalar ``(L_L + f·L_S)/(1+f)``:
+    gradients are linear, so its gradient IS the paper's merged gradient
+    ``(g_L + f·g_S)/(1+f)`` — the scale/add/normalize of §3.4 rides the
+    backward accumulation instead of materializing two parameter-sized
+    gradients and merging them after.  The loss is taken w.r.t. the flat
+    buffer through ``spec.unravel``, so the gradient arrives flat (autodiff
+    transposes the unravel into the ravel — no per-step pad/reshape), and
+    ``dbl_apply_flat2d`` finishes with the single apply(+momentum) sweep.
+    ``lr`` is baked in (phases carry a constant lr on this path).
+    """
+    from repro.kernels.dbl_merge import dbl_apply_flat2d
+
+    if layout.n_small == 0 or layout.small_valid == 0:
+        raise ValueError("fused dbl phase needs a non-empty small group; "
+                         "use make_weighted_step for the baseline")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    pw = layout.per_worker
+    nl_rows = (layout.n_workers - layout.n_small) * pw
+    small_idx = jnp.asarray(_small_valid_index(layout))
+    f = float(layout.factor_small)
+    lr_f = float(lr)
+    mom = float(momentum)
+
+    def merged_loss(p2, batch, rng):
+        params = spec.unravel(p2)
+        sub = lambda rows: {k: v[rows] for k, v in batch.items()
+                            if k in _GROUP_KEYS}
+        loss_l, _ = _weighted_loss(params, cfg, sub(jnp.arange(nl_rows)),
+                                   rng, drop_rate)
+        loss_s, _ = _weighted_loss(params, cfg, sub(small_idx), rng,
+                                   drop_rate)
+        return (loss_l + f * loss_s) / (1.0 + f), ()
+
+    def phase_fn(p2, v2, batches, rngs):
+        # keep the scan carry/xs as lean as the configuration allows —
+        # extra pytree structure in the carry costs real per-step time
+        def step_update(p2, v2, xs):
+            batch, rng = xs if rngs is not None else (xs, None)
+            (loss, _), g2 = jax.value_and_grad(merged_loss, has_aux=True)(
+                p2, batch, rng)
+            if mom > 0:
+                p2, v2 = dbl_apply_flat2d(p2, g2, vel2=v2, lr=lr_f,
+                                          momentum=mom, interpret=interpret)
+            else:
+                p2 = dbl_apply_flat2d(p2, g2, lr=lr_f, interpret=interpret)
+            return p2, v2, loss
+
+        xs = (batches, rngs) if rngs is not None else batches
+        if mom > 0:
+            def body(carry, x):
+                p2, v2, loss = step_update(*carry, x)
+                return (p2, v2), loss
+            (p2, v2), losses = jax.lax.scan(body, (p2, v2), xs)
+        else:
+            def body(p2, x):
+                p2, _, loss = step_update(p2, None, x)
+                return p2, loss
+            p2, losses = jax.lax.scan(body, p2, xs)
+        return p2, v2, losses
+
+    return phase_fn
 
 
 def make_micro_step(cfg, optimizer, *, layout, micro_steps: int = 2,

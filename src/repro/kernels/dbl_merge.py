@@ -6,18 +6,44 @@ the small-group gradient at the model-update factor f:
     w' = w − lr · (g_L + f·g_S) / (1 + f)
 
 Fusing the scale/add/normalize/apply into one VMEM pass removes three HBM
-round-trips of the parameter-sized temporaries the naive HLO sequence makes.
-Operates on flat parameter blocks tiled (rows, 128) — VPU lane-aligned.
+round-trips of the parameter-sized temporaries the naive HLO sequence makes
+(see ``kernels.ref.dbl_merge_unfused`` for that sequence, materialized).
+
+The hot-path entry point is ``dbl_merge_flat2d``: ONE launch over the whole
+flat parameter store (``repro.core.flat``) — a lane/sublane-padded
+``(rows, LANE)`` f32 buffer — updated in place via ``input_output_aliases``.
+Buffers up to ``MAX_WHOLE_ROWS`` rows run as a single whole-buffer block;
+larger ones grid over ``BLOCK_ROWS``-row tiles (the codec pads rows to the
+matching multiple).  An optional velocity buffer folds the PS server
+momentum into the same VMEM sweep:
+
+    v' = m·v + (g_L + f·g_S)/(1 + f);   w' = w − lr·v'
+
+``launch_count()`` counts Python-level kernel launches as traced — each
+call here is exactly one ``pallas_call`` in the compiled step, which the
+flat-store tests assert stays at ONE per server update.
+
+``dbl_merge_tree`` / ``dbl_merge_flat`` are the pytree / 1D front ends
+(both route through the same single-launch core).
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-LANE = 128
+from repro.core.flat import BLOCK_ROWS, LANE, MAX_WHOLE_ROWS, padded_rows
+
+_LAUNCHES = 0
+
+
+def launch_count() -> int:
+    """Python-level kernel launches so far (increments once per traced
+    ``pallas_call`` — the flat-store launch-count test reads this)."""
+    return _LAUNCHES
 
 
 def _kernel(p_ref, gl_ref, gs_ref, o_ref, *, factor: float, lr: float):
@@ -28,35 +54,152 @@ def _kernel(p_ref, gl_ref, gs_ref, o_ref, *, factor: float, lr: float):
     o_ref[...] = (p - lr * step).astype(o_ref.dtype)
 
 
+def _kernel_vel(p_ref, gl_ref, gs_ref, v_ref, op_ref, ov_ref, *,
+                factor: float, lr: float, momentum: float):
+    p = p_ref[...].astype(jnp.float32)
+    gl = gl_ref[...].astype(jnp.float32)
+    gs = gs_ref[...].astype(jnp.float32)
+    g = (gl + factor * gs) * (1.0 / (1.0 + factor))
+    v = momentum * v_ref[...].astype(jnp.float32) + g
+    ov_ref[...] = v.astype(ov_ref.dtype)
+    op_ref[...] = (p - lr * v).astype(op_ref.dtype)
+
+
+def _kernel_apply(p_ref, g_ref, o_ref, *, lr: float):
+    p = p_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    o_ref[...] = (p - lr * g).astype(o_ref.dtype)
+
+
+def _kernel_apply_vel(p_ref, g_ref, v_ref, op_ref, ov_ref, *,
+                      lr: float, momentum: float):
+    p = p_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    v = momentum * v_ref[...].astype(jnp.float32) + g
+    ov_ref[...] = v.astype(ov_ref.dtype)
+    op_ref[...] = (p - lr * v).astype(op_ref.dtype)
+
+
+def _launch(kernel, ins, out_shape, aliases, *, interpret, block_rows):
+    """One ``pallas_call`` over same-shaped flat buffers: a single
+    whole-buffer block up to ``MAX_WHOLE_ROWS`` rows, a 1-D grid of
+    ``block_rows``-row tiles beyond (the codec pads rows to the matching
+    multiple).  Counts as exactly one launch."""
+    global _LAUNCHES
+    _LAUNCHES += 1
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    rows = ins[0].shape[0]
+    if rows <= MAX_WHOLE_ROWS:
+        # whole-buffer block: no grid machinery, no index maps
+        return pl.pallas_call(kernel, out_shape=out_shape,
+                              interpret=interpret,
+                              input_output_aliases=aliases)(*ins)
+    if rows % block_rows:
+        raise ValueError(
+            f"flat buffer of {rows} rows cannot grid over "
+            f"block_rows={block_rows}; pad rows to a multiple (the codec's "
+            f"padded_rows() does this for the default BLOCK_ROWS)")
+    spec = pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))
+    out_specs = (spec if not isinstance(out_shape, tuple)
+                 else tuple(spec for _ in out_shape))
+    return pl.pallas_call(kernel, grid=(rows // block_rows,),
+                          in_specs=[spec] * len(ins), out_specs=out_specs,
+                          out_shape=out_shape, interpret=interpret,
+                          input_output_aliases=aliases)(*ins)
+
+
+def dbl_merge_flat2d(p2, gl2, gs2, *, factor: float, lr: float,
+                     vel2=None, momentum: float = 0.0,
+                     interpret: Optional[bool] = None,
+                     block_rows: int = BLOCK_ROWS):
+    """ONE fused server update over the whole flat store.
+
+    p2 / gl2 / gs2 (and vel2, if given): ``(rows, LANE)`` buffers from
+    ``FlatSpec.ravel``.  Returns the updated params buffer, or the
+    ``(params, velocity)`` pair when ``vel2`` is given (momentum folded
+    into the same pass).  Updates alias their inputs, so jit callers that
+    donate the carry run the sweep in place.
+    """
+    if vel2 is None:
+        return _launch(functools.partial(_kernel, factor=factor, lr=lr),
+                       (p2, gl2, gs2),
+                       jax.ShapeDtypeStruct(p2.shape, p2.dtype), {0: 0},
+                       interpret=interpret, block_rows=block_rows)
+    return _launch(functools.partial(_kernel_vel, factor=factor, lr=lr,
+                                     momentum=momentum),
+                   (p2, gl2, gs2, vel2),
+                   (jax.ShapeDtypeStruct(p2.shape, p2.dtype),
+                    jax.ShapeDtypeStruct(vel2.shape, vel2.dtype)),
+                   {0: 0, 3: 1}, interpret=interpret, block_rows=block_rows)
+
+
+def dbl_apply_flat2d(p2, g2, *, lr: float, vel2=None, momentum: float = 0.0,
+                     interpret: Optional[bool] = None,
+                     block_rows: int = BLOCK_ROWS):
+    """ONE server apply over the whole flat store, for a gradient that
+    already carries the dual-batch merge.
+
+    Gradients are linear, so ``grad((L_L + f·L_S)/(1+f))`` IS the paper's
+    merged gradient ``(g_L + f·g_S)/(1+f)`` — the engine's scan path folds
+    the scale/add/normalize into the backward accumulation and hands this
+    kernel the merged ``g2``, leaving one apply (+momentum) VMEM sweep:
+
+        v' = m·v + g;   w' = w − lr·v'      (v ≡ g when m == 0)
+
+    Same aliasing/blocking contract as ``dbl_merge_flat2d``.
+    """
+    if vel2 is None:
+        return _launch(functools.partial(_kernel_apply, lr=lr), (p2, g2),
+                       jax.ShapeDtypeStruct(p2.shape, p2.dtype), {0: 0},
+                       interpret=interpret, block_rows=block_rows)
+    return _launch(functools.partial(_kernel_apply_vel, lr=lr,
+                                     momentum=momentum),
+                   (p2, g2, vel2),
+                   (jax.ShapeDtypeStruct(p2.shape, p2.dtype),
+                    jax.ShapeDtypeStruct(vel2.shape, vel2.dtype)),
+                   {0: 0, 2: 1}, interpret=interpret, block_rows=block_rows)
+
+
 def dbl_merge_flat(p, g_large, g_small, *, factor: float, lr: float,
-                   block_rows: int = 256, interpret: bool = False):
-    """p, g_large, g_small: flat (N,) arrays -> updated flat params."""
+                   block_rows: int = BLOCK_ROWS, interpret: bool = False):
+    """p, g_large, g_small: flat (N,) arrays -> updated flat params.
+    Pads to the store layout (respecting a custom ``block_rows`` so large
+    buffers always grid), runs the single-launch core, slices back."""
     n = p.shape[0]
-    pad = (-n) % (block_rows * LANE)
-    shape2 = ((n + pad) // LANE, LANE)
+    rows = padded_rows(n)
+    if rows > MAX_WHOLE_ROWS and rows % block_rows:
+        rows += block_rows - rows % block_rows
+    pad = rows * LANE - n
 
     def to2(x):
-        return jnp.pad(x, (0, pad)).reshape(shape2)
+        return jnp.pad(x, (0, pad)).reshape(rows, LANE)
 
-    rows = shape2[0]
-    grid = (rows // block_rows,)
-    spec = pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))
-    out = pl.pallas_call(
-        functools.partial(_kernel, factor=factor, lr=lr),
-        grid=grid,
-        in_specs=[spec, spec, spec],
-        out_specs=spec,
-        out_shape=jax.ShapeDtypeStruct(shape2, p.dtype),
-        interpret=interpret,
-    )(to2(p), to2(g_large), to2(g_small))
+    out = dbl_merge_flat2d(to2(p), to2(g_large), to2(g_small),
+                           factor=factor, lr=lr, interpret=interpret,
+                           block_rows=block_rows)
     return out.reshape(-1)[:n]
 
 
 def dbl_merge_tree(params, g_large, g_small, *, factor: float, lr: float,
-                   interpret: bool = False):
-    """Apply the fused merge leaf-wise over parameter pytrees."""
-    return jax.tree_util.tree_map(
-        lambda p, gl, gs: dbl_merge_flat(
-            p.reshape(-1), gl.reshape(-1), gs.reshape(-1),
-            factor=factor, lr=lr, interpret=interpret).reshape(p.shape),
-        params, g_large, g_small)
+                   interpret: bool = False, leafwise: bool = False):
+    """Fused merge over parameter pytrees — ONE kernel launch for the whole
+    tree via the flat-store codec (offsets cached on treedef identity),
+    not one per leaf.
+
+    ``leafwise=True`` applies the same kernel per leaf instead: the flat
+    concat would destroy per-leaf shardings (XLA falls back to a full
+    rematerialization), so mesh-sharded trees keep the leaf-at-a-time form.
+    """
+    if leafwise:
+        return jax.tree_util.tree_map(
+            lambda p, gl, gs: dbl_merge_flat(
+                p.reshape(-1), gl.reshape(-1), gs.reshape(-1),
+                factor=factor, lr=lr, interpret=interpret).reshape(p.shape),
+            params, g_large, g_small)
+    from repro.core.flat import flat_spec
+    spec = flat_spec(params)
+    out = dbl_merge_flat2d(spec.ravel(params), spec.ravel(g_large),
+                           spec.ravel(g_small), factor=factor, lr=lr,
+                           interpret=interpret)
+    return spec.unravel(out)

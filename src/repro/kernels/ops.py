@@ -70,14 +70,45 @@ def wkv6(r, k, v, w, u, *, chunk: int = 128, backend: str = "auto",
     return y
 
 
+def _sharded(tree) -> bool:
+    """Any committed, non-fully-replicated jax.Array leaf?  Tracers hide
+    their shardings, so a traced call (caller's own jit) counts as sharded
+    — the per-leaf form is always shard-safe; the flat concat is not."""
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if isinstance(leaf, jax.core.Tracer):
+            return True
+        sh = getattr(leaf, "sharding", None)
+        if sh is not None and len(sh.device_set) > 1 \
+                and not sh.is_fully_replicated:
+            return True
+    return False
+
+
 @functools.partial(jax.jit, static_argnames=("factor", "lr", "backend",
-                                             "interpret"))
-def dbl_merge(params, g_large, g_small, *, factor: float, lr: float,
-              backend: str = "auto", interpret: bool = False):
-    """Fused dual-batch server update over parameter pytrees."""
+                                             "interpret", "leafwise"))
+def _dbl_merge_jit(params, g_large, g_small, *, factor: float, lr: float,
+                   backend: str, interpret: bool, leafwise: bool):
     if _use_pallas(backend) or interpret:
         return dbl_merge_tree(params, g_large, g_small, factor=factor,
-                              lr=lr, interpret=interpret)
+                              lr=lr, interpret=interpret, leafwise=leafwise)
     return jax.tree_util.tree_map(
         lambda p, gl, gs: ref.dbl_merge_ref(p, gl, gs, factor=factor, lr=lr),
         params, g_large, g_small)
+
+
+def dbl_merge(params, g_large, g_small, *, factor: float, lr: float,
+              backend: str = "auto", interpret: bool = False,
+              leafwise: bool | None = None):
+    """Fused dual-batch server update over parameter pytrees.
+
+    Replicated trees take the flat-store single-launch path; mesh-sharded
+    trees fall back to leaf-at-a-time kernels (the flat concat would force
+    XLA to rematerialize every sharded leaf).  Calls traced inside an
+    outer jit can't reveal their shardings, so they default to the
+    shard-safe per-leaf form — pass ``leafwise=False`` there to opt a
+    known-replicated tree into the single-launch path."""
+    if leafwise is None:
+        leafwise = _sharded(params)
+    return _dbl_merge_jit(params, g_large, g_small, factor=factor, lr=lr,
+                          backend=backend, interpret=interpret,
+                          leafwise=leafwise)

@@ -101,3 +101,28 @@ def dbl_merge_ref(p, g_large, g_small, *, factor, lr):
     gs = g_small.astype(jnp.float32)
     step = (gl + factor * gs) / (1.0 + factor)
     return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+
+def dbl_merge_unfused(p, g_large, g_small, *, factor, lr):
+    """The NAIVE scale/add/normalize/apply sequence with every intermediate
+    materialized — the three parameter-sized HBM round-trips the fused
+    kernel exists to remove.
+
+    ``dbl_merge_ref`` above states the same math as one expression, which
+    XLA fuses into a single pass — i.e. it never actually executes the
+    unfused sequence, so benchmarking against it measures kernel machinery
+    vs the XLA fuser, not fused-vs-unfused semantics.  The optimization
+    barriers here pin each temporary to memory, so this IS the naive
+    sequence, on every backend.  Correctness tests should keep using
+    ``dbl_merge_ref``; the engine-step benchmark compares against this.
+    """
+    merged = jax.tree_util.tree_map(
+        lambda gl, gs: gl.astype(jnp.float32)
+        + factor * gs.astype(jnp.float32), g_large, g_small)
+    merged = jax.lax.optimization_barrier(merged)
+    step = jax.tree_util.tree_map(
+        lambda m: m * (1.0 / (1.0 + factor)), merged)
+    step = jax.lax.optimization_barrier(step)
+    return jax.tree_util.tree_map(
+        lambda w, s: (w.astype(jnp.float32) - lr * s).astype(w.dtype),
+        p, step)

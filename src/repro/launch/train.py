@@ -84,6 +84,13 @@ def run(argv=None):
     ap.add_argument("--no-fused-merge", dest="fused", action="store_false",
                     default=True,
                     help="unfused server update (dual-batch SGD path)")
+    ap.add_argument("--no-scan-loop", dest="scan", action="store_false",
+                    default=True,
+                    help="step-at-a-time loop instead of the scan-compiled "
+                         "flat-store phase loop (fused SGD path)")
+    ap.add_argument("--server-momentum", type=float, default=0.0,
+                    help="PS-server momentum folded into the fused kernel "
+                         "pass (dual-batch SGD scan path)")
     ap.add_argument("--ckpt", default="",
                     help="checkpoint dir; saves at every phase boundary")
     ap.add_argument("--resume", action="store_true",
@@ -109,16 +116,27 @@ def run(argv=None):
     sgd_server = (args.optimizer == "sgd"
                   and args.scheme in ("dbl", "hybrid")
                   and args.micro_steps == 0)
+    if args.server_momentum and not sgd_server:
+        ap.error("--server-momentum needs the dual-batch SGD server path "
+                 "(--optimizer sgd, --scheme dbl/hybrid, no --micro-steps)")
+    if args.server_momentum and not (args.scan and args.fused):
+        ap.error("--server-momentum needs the fused scan loop "
+                 "(drop --no-scan-loop / --no-fused-merge)")
     if sgd_server:
         opt = make_optimizer("sgd", momentum=0.0, weight_decay=0.0)
+        mom = (f"server momentum {args.server_momentum} in-kernel"
+               if args.server_momentum else "no momentum")
         print("# dual-batch SGD: paper §3.4 server update "
               f"({'fused dbl_merge' if args.fused else 'unfused'} path, "
-              "no momentum/weight decay)")
+              f"{mom}, no weight decay)")
     else:
         opt = make_optimizer(args.optimizer, weight_decay=0.01)
     opt_state = opt.init(params)
     engine = TrainEngine(cfg, opt, sgd_server=sgd_server,
-                         fused_merge=("auto" if args.fused else False))
+                         fused_merge=("auto" if args.fused else False),
+                         scan_loop=("auto" if args.scan else False),
+                         server_momentum=(args.server_momentum
+                                          if sgd_server else 0.0))
 
     def batch_fn(phase, gstep):
         # stateless in gstep so a phase-boundary resume replays the

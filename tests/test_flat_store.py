@@ -1,0 +1,383 @@
+"""Flat parameter store: codec bit-exactness, single-launch hot path,
+scan-loop equivalence, and checkpoint compatibility (PR 3 invariants)."""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import models
+from repro.configs import get_config, reduced
+from repro.core.flat import LANE, FlatParams, flat_spec
+from repro.core.spmd_dual_batch import SpmdDualBatch
+from repro.kernels import dbl_merge
+from repro.kernels.dbl_merge import (dbl_apply_flat2d, dbl_merge_flat,
+                                     dbl_merge_flat2d, dbl_merge_tree)
+from repro.optim import sgd_momentum
+
+
+def mixed_tree(seed=0):
+    k = jax.random.split(jax.random.PRNGKey(seed), 4)
+    return {"w": jax.random.normal(k[0], (13, 7)),
+            "blocks": [jax.random.normal(k[1], (130,)),
+                       {"scale": jnp.float32(1.5),
+                        "bias": jax.random.normal(k[2], (5, 3, 2),
+                                                  jnp.bfloat16)}],
+            "head": jax.random.normal(k[3], (64, 64))}
+
+
+def tree_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    return all(x.dtype == np.asarray(y).dtype
+               and np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(la, lb))
+
+
+def max_diff(a, b):
+    return max(float(jnp.max(jnp.abs(x.astype(jnp.float32)
+                                     - y.astype(jnp.float32))))
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+def tiny_cfg():
+    return reduced(get_config("phi3-mini-3.8b"), layers=1, d_model=64,
+                   n_heads=2, vocab=64)
+
+
+LAYOUT = SpmdDualBatch(global_batch=8, n_workers=4, n_small=2,
+                       small_valid=1, factor_small=0.8)
+
+
+def token_batch_fn(cfg, seed=0):
+    rng = np.random.RandomState(seed)
+    cache = {}
+
+    def batch_fn(phase, gstep):
+        if gstep not in cache:
+            tok = rng.randint(0, cfg.vocab_size,
+                              (phase.batch_size, phase.input_size))
+            cache[gstep] = {"tokens": jnp.asarray(tok),
+                            "labels": jnp.asarray(tok)}
+        return cache[gstep]
+    return batch_fn
+
+
+# ------------------------------ codec ---------------------------------------
+def test_codec_roundtrip_bit_for_bit():
+    tree = mixed_tree()
+    spec = flat_spec(tree)
+    assert spec.shape[1] == LANE and spec.rows % 8 == 0
+    assert tree_equal(tree, spec.unravel(spec.ravel(tree)))
+
+
+def test_codec_spec_cached_on_structure():
+    t1, t2 = mixed_tree(0), mixed_tree(1)
+    assert flat_spec(t1) is flat_spec(t2)
+    other = {"w": jnp.zeros((3,))}
+    assert flat_spec(other) is not flat_spec(t1)
+
+
+def test_flatparams_wrapper_roundtrip():
+    tree = mixed_tree()
+    fp = FlatParams.from_tree(tree)
+    assert tree_equal(tree, fp.to_tree())
+
+
+# ------------------- flat vs pytree update, bit for bit ---------------------
+def _grads(tree, seed):
+    k = jax.random.PRNGKey(seed)
+    return jax.tree_util.tree_map(
+        lambda l, i=iter(range(10**6)): jax.random.normal(
+            jax.random.fold_in(k, next(i)), np.shape(l)).astype(l.dtype),
+        tree)
+
+
+def _leafwise_update(tree, gl, gs, *, factor, lr):
+    """The pre-flat-store reference: the SAME kernel applied per leaf."""
+    return jax.tree_util.tree_map(
+        lambda p, a, b: dbl_merge_flat(
+            p.reshape(-1).astype(jnp.float32),
+            a.reshape(-1).astype(jnp.float32),
+            b.reshape(-1).astype(jnp.float32),
+            factor=factor, lr=lr, interpret=True
+        ).reshape(p.shape).astype(p.dtype), tree, gl, gs)
+
+
+def test_flat_vs_pytree_update_one_step_bit_for_bit():
+    tree = mixed_tree()
+    gl, gs = _grads(tree, 1), _grads(tree, 2)
+    flat = dbl_merge_tree(tree, gl, gs, factor=0.7, lr=0.05, interpret=True)
+    leafwise = _leafwise_update(tree, gl, gs, factor=0.7, lr=0.05)
+    assert tree_equal(flat, leafwise)
+
+
+def test_flat_vs_pytree_update_full_phase_bit_for_bit():
+    """K-step update recurrence on the flat store vs leaf-by-leaf — the
+    carry stays flat the whole phase and still lands on identical bits.
+
+    f32 tree: f32 leaves round-trip the f32 store exactly, so the phase-long
+    flat carry is bit-equal to per-step leafwise updates.  (A bf16 leaf
+    would legitimately differ — the flat carry skips the per-step bf16
+    re-rounding, keeping MORE precision across the phase.)"""
+    tree = jax.tree_util.tree_map(
+        lambda l: l.astype(jnp.float32), mixed_tree())
+    spec = flat_spec(tree)
+    steps = 5
+    p2 = spec.ravel(tree)
+    leafwise = tree
+    for s in range(steps):
+        gl, gs = _grads(tree, 10 + s), _grads(tree, 100 + s)
+        p2 = dbl_merge_flat2d(p2, spec.ravel(gl), spec.ravel(gs),
+                              factor=0.7, lr=0.05, interpret=True)
+        leafwise = _leafwise_update(leafwise, gl, gs, factor=0.7, lr=0.05)
+    assert tree_equal(spec.unravel(p2), leafwise)
+
+
+def test_apply_kernel_momentum_matches_reference():
+    tree = mixed_tree()
+    spec = flat_spec(tree)
+    p2, g2 = spec.ravel(tree), spec.ravel(_grads(tree, 3))
+    v2 = spec.ravel(_grads(tree, 4))
+    np2, nv2 = dbl_apply_flat2d(p2, g2, lr=0.05, vel2=v2, momentum=0.9,
+                                interpret=True)
+    exp_v = 0.9 * v2 + g2
+    # independently recomputed oracle: equal up to FMA-contraction ULPs
+    assert np.allclose(np.asarray(nv2), np.asarray(exp_v), atol=1e-6)
+    assert np.allclose(np.asarray(np2), np.asarray(p2 - 0.05 * exp_v),
+                       atol=1e-6)
+
+
+# ----------------------- exactly one launch per update ----------------------
+def test_single_launch_per_server_update():
+    """The compiled fused step traces exactly ONE pallas_call for the whole
+    parameter tree — the per-leaf launch storm is gone."""
+    from repro.engine.steps import make_fused_dbl_step, make_fused_phase_scan
+
+    cfg = tiny_cfg()
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0,
+                             cfg.vocab_size)
+    batch = {"tokens": tok, "labels": tok}
+    opt = sgd_momentum(0.0)
+    s0 = opt.init(params)
+    n_leaves = len(jax.tree_util.tree_leaves(params))
+    assert n_leaves > 1
+
+    step = make_fused_dbl_step(cfg, LAYOUT, fused=True, interpret=True)
+    before = dbl_merge.launch_count()
+    jax.make_jaxpr(lambda p, s, b: step(p, s, b, 0.05, None))(
+        params, s0, batch)
+    assert dbl_merge.launch_count() - before == 1
+
+    # the scan path: one launch per server update in the whole-phase program
+    spec = flat_spec(params)
+    phase_fn = make_fused_phase_scan(cfg, LAYOUT, spec, lr=0.05,
+                                     interpret=True)
+    batches = {k: jnp.stack([v] * 3) for k, v in batch.items()}
+    before = dbl_merge.launch_count()
+    jax.make_jaxpr(lambda p2, b: phase_fn(p2, None, b, None))(
+        spec.ravel(params), batches)
+    assert dbl_merge.launch_count() - before == 1
+
+
+# ----------------------- scan loop vs python loop ---------------------------
+def _engine_phases():
+    from repro.engine.phases import Phase
+    return [Phase(input_size=16, n_steps=4, lr=0.02, batch_size=8,
+                  layout=LAYOUT),
+            Phase(input_size=16, n_steps=3, lr=0.004, batch_size=8,
+                  layout=LAYOUT)]
+
+
+def test_scan_loop_matches_python_loop():
+    from repro.engine.engine import TrainEngine
+
+    cfg = tiny_cfg()
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    out = {}
+    for mode, scan in (("scan", "auto"), ("loop", False)):
+        opt = sgd_momentum(0.0)
+        engine = TrainEngine(cfg, opt, sgd_server=True, scan_loop=scan,
+                             interpret=True)
+        p0 = jax.tree_util.tree_map(jnp.copy, params)
+        p, _, hist = engine.run(_engine_phases(), p0, opt.init(p0),
+                                token_batch_fn(cfg), log_every=1)
+        out[mode] = (p, hist)
+    p_scan, h_scan = out["scan"]
+    p_loop, h_loop = out["loop"]
+    assert max_diff(p_scan, p_loop) < 1e-5
+    assert [h["step"] for h in h_scan] == [h["step"] for h in h_loop]
+    for a, b in zip(h_scan, h_loop):
+        assert abs(a["loss"] - b["loss"]) < 1e-2
+
+
+def test_server_momentum_rejects_non_scan_configs():
+    """Configurations where the fused path bypasses the scan must error —
+    the per-step loop would silently train plain SGD, dropping momentum."""
+    from repro.engine.engine import TrainEngine
+
+    cfg = tiny_cfg()
+    for kw in ({"scan_loop": False}, {"fused_merge": False},
+               {"mesh": object()}):
+        try:
+            TrainEngine(cfg, sgd_momentum(0.9), sgd_server=True,
+                        server_momentum=0.9, **kw)
+        except ValueError as e:
+            assert "server_momentum" in str(e)
+        else:
+            raise AssertionError(f"no error for {kw}")
+
+    # ... and a schedule whose phases bypass the fused path (weighted kind)
+    # must error at run time, not silently train without momentum
+    from repro.engine.phases import Phase
+    engine = TrainEngine(cfg, sgd_momentum(0.9), server_momentum=0.9,
+                         interpret=True)
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    baseline = Phase(input_size=16, n_steps=1, lr=0.01, batch_size=8)
+    try:
+        engine.run([baseline], params,
+                   sgd_momentum(0.9).init(params), token_batch_fn(cfg))
+    except ValueError as e:
+        assert "server_momentum" in str(e)
+    else:
+        raise AssertionError("weighted phase accepted server_momentum")
+
+
+def test_scan_loop_server_momentum_runs_and_updates_velocity():
+    from repro.engine.engine import TrainEngine
+
+    cfg = tiny_cfg()
+    opt = sgd_momentum(0.9)
+    engine = TrainEngine(cfg, opt, sgd_server=True, server_momentum=0.9,
+                         interpret=True)
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    s0 = opt.init(params)
+    p, s1, hist = engine.run(_engine_phases(), params, s0,
+                             token_batch_fn(cfg), log_every=2)
+    assert hist and all(np.isfinite(h["loss"]) for h in hist)
+    # the kernel-folded velocity was written back into the optimizer state
+    assert max_diff(s1["v"], jax.tree_util.tree_map(jnp.zeros_like,
+                                                    s1["v"])) > 0
+
+
+def test_server_momentum_preserves_velocity_dtype():
+    """The velocity unravels through ITS OWN spec: an f32 optimizer state
+    over bf16 params must come back f32, not truncated to the param dtype."""
+    import jax.numpy as jnp
+    from repro.engine.engine import TrainEngine
+
+    cfg = tiny_cfg()
+    opt = sgd_momentum(0.9, state_dtype=jnp.float32)
+    engine = TrainEngine(cfg, opt, sgd_server=True, server_momentum=0.9,
+                         interpret=True)
+    params = jax.tree_util.tree_map(
+        lambda l: l.astype(jnp.bfloat16),
+        models.init_params(cfg, jax.random.PRNGKey(0)))
+    s0 = opt.init(params)
+    _, s1, _ = engine.run(_engine_phases()[:1], params, s0,
+                          token_batch_fn(cfg), log_every=4)
+    for a, b in zip(jax.tree_util.tree_leaves(s0["v"]),
+                    jax.tree_util.tree_leaves(s1["v"])):
+        assert b.dtype == a.dtype == jnp.float32
+
+
+# ------------------------- checkpoint round trip ----------------------------
+def test_checkpoint_roundtrip_namedtuple_tree(tmp_path):
+    """Container types beyond dict/list must survive the FlatParams-aware
+    load path (regression: the repack traversal must not rebuild
+    namedtuples positionally from a generator)."""
+    import collections
+
+    from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint
+
+    Pt = collections.namedtuple("Pt", ["x", "y"])
+    tree = {"state": Pt(jnp.arange(4, dtype=jnp.float32),
+                        jnp.ones((2, 3))),
+            "flat": FlatParams.from_tree(mixed_tree())}
+    save_checkpoint(str(tmp_path), 1, tree)
+    like = {"state": Pt(jnp.zeros(4), jnp.zeros((2, 3))),
+            "flat": FlatParams.from_tree(jax.tree_util.tree_map(
+                jnp.zeros_like, mixed_tree()))}
+    back = load_checkpoint(str(tmp_path), 1, like)
+    assert isinstance(back["state"], Pt)
+    assert tree_equal(back["state"], tree["state"])
+    assert tree_equal(back["flat"].to_tree(), tree["flat"].to_tree())
+
+
+def test_checkpoint_bytes_identical_flat_vs_pytree(tmp_path):
+    import hashlib
+
+    from repro.checkpoint.ckpt import save_checkpoint
+
+    tree = mixed_tree()
+    f1 = save_checkpoint(str(tmp_path / "a"), 1, {"params": tree})
+    f2 = save_checkpoint(str(tmp_path / "b"), 1,
+                         {"params": FlatParams.from_tree(tree)})
+    sha = lambda f: hashlib.sha256(open(f, "rb").read()).hexdigest()
+    assert sha(f1) == sha(f2)
+
+
+def test_checkpoint_roundtrip_restores_into_both_backends(tmp_path):
+    """SpmdBackend writes a phase-boundary checkpoint; it restores through
+    the codec into a flat store, and either representation resumes both
+    backends (PsSimBackend accepts the flat store directly)."""
+    from repro.checkpoint.ckpt import restore_latest
+    from repro.cluster import BSP, PsSimBackend, SpmdBackend
+    from repro.core import LinearTimeModel, solve_plan
+    from repro.engine.engine import TrainEngine
+    from repro.engine.phases import single_phase
+
+    cfg = tiny_cfg()
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    tm = LinearTimeModel(a=1.0, b=24.6)
+    plan = solve_plan(tm, B_L=8, d=512, n_workers=4, n_small=2, k=1.05)
+    phases = single_phase(input_size=16, n_steps=2, lr=0.01, batch_size=8,
+                          plan=plan, epochs=1) \
+        + single_phase(input_size=16, n_steps=2, lr=0.002, batch_size=8,
+                       plan=plan, epochs=1)
+    opt = sgd_momentum(0.0)
+    engine = TrainEngine(cfg, opt, sgd_server=True, interpret=True)
+    backend = SpmdBackend(engine, token_batch_fn(cfg))
+    ckpt = str(tmp_path / "ck")
+    res = backend.run(phases, jax.tree_util.tree_map(jnp.copy, params),
+                      seed=0, ckpt_dir=ckpt)
+
+    # restore the final boundary into flat and pytree likes: same values
+    like_tree = {"params": jax.tree_util.tree_map(jnp.zeros_like,
+                                                  res.params),
+                 "opt_state": opt.init(params)}
+    like_flat = {"params": FlatParams.from_tree(
+        jax.tree_util.tree_map(jnp.zeros_like, res.params)),
+        "opt_state": opt.init(params)}
+    step_t, tree_t = restore_latest(ckpt, like_tree)
+    step_f, tree_f = restore_latest(ckpt, like_flat)
+    assert step_t == step_f == 2
+    assert isinstance(tree_f["params"], FlatParams)
+    assert tree_equal(tree_t["params"], tree_f["params"].to_tree())
+    assert max_diff(tree_t["params"], res.params) == 0
+
+    # the flat store resumes the SPMD backend (one more phase) identically
+    # to the pytree restore
+    extra = single_phase(input_size=16, n_steps=2, lr=0.001, batch_size=8,
+                         plan=plan, epochs=1)
+    r1 = SpmdBackend(engine, token_batch_fn(cfg)).run(
+        extra, tree_f["params"], seed=1)
+    r2 = SpmdBackend(engine, token_batch_fn(cfg)).run(
+        extra, tree_t["params"], seed=1)
+    assert max_diff(r1.params, r2.params) == 0
+
+    # ... and the PS-sim backend accepts the flat store as initial params
+    def fns_factory(input_size):
+        def grad_fn(p, b):
+            return jax.grad(lambda pp: models.loss_fn(pp, cfg, b)[0])(p)
+
+        bf = token_batch_fn(cfg, seed=3)
+
+        def data_fn(rng, wid, bsz):
+            return bf(phases[0], int(rng.integers(0, 4)))
+        return grad_fn, data_fn, None
+
+    sim = PsSimBackend(fns_factory, tm=tm, sync=BSP(), momentum=0.0)
+    r_flat = sim.run(phases[:1], tree_f["params"], seed=0)
+    r_tree = sim.run(phases[:1], tree_t["params"], seed=0)
+    assert max_diff(r_flat.params, r_tree.params) == 0

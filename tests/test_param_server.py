@@ -2,7 +2,6 @@
 toy scale (real claims validated in benchmarks/).  Sync semantics are
 ``SyncPolicy`` objects (repro.cluster.sync); the legacy string spelling and
 the ``repro.core.param_server`` import path are covered as compat shims."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -30,10 +29,10 @@ def quad_problem(dim=8, seed=0, log=None):
         r = A @ params["x"] - target
         return float(jnp.mean(r * r))
 
-    def data_fn(key, wid, bsz):
+    def data_fn(rng, wid, bsz):
         if log is not None:
             log.append(wid)
-        return jax.random.randint(key, (bsz,), 0, 32)
+        return jnp.asarray(rng.integers(0, 32, size=bsz), jnp.int32)
 
     return {"x": jnp.zeros(dim)}, grad_fn, data_fn, loss
 
