@@ -26,7 +26,11 @@ baseline moved):
     update must beat the unfused sequence, full stop;
   * ``engine/step_fused_us <= engine/step_unfused_us * (1 + --step-tol)``
     — the scan-compiled hot path must not lose to the per-step fallback
-    (small tolerance for shared-runner timing noise; default 10%).
+    (small tolerance for shared-runner timing noise; default 10%);
+  * ``engine/phase_transition_warm_us <= engine/phase_transition_cold_us *
+    (1 + --step-tol)`` — the overlapped next-phase warm compile must not
+    stall a cyclic resolution boundary longer than the cold recompile it
+    replaces (same shared-runner noise tolerance as the step gate).
 Run them alone (hard CI step) with ``--directional-only``; the baseline
 comparison above stays informative on shared runners.
 """
@@ -68,6 +72,24 @@ def check_directional(rows: dict, *, step_tol: float = 0.10) -> list:
     else:
         print(f"  directional ok: engine/step_fused_us={f_us:.1f} <= "
               f"step_unfused_us={u_us:.1f} (+{step_tol * 100:.0f}% tol)")
+    w_us = rows.get("engine/phase_transition_warm_us")
+    c_us = rows.get("engine/phase_transition_cold_us")
+    if w_us is None or c_us is None:
+        print("  directional: engine/phase_transition_{warm,cold}_us "
+              "missing (not run)")
+    elif w_us > c_us * (1.0 + step_tol):
+        # same shared-runner noise tolerance as the step gate: on a loaded
+        # 2-vCPU runner the background compile timeshares with the
+        # foreground phase, so demand a win beyond noise, not exact order
+        failures.append(
+            f"engine/phase_transition_warm_us={w_us:.1f} > "
+            f"cold_us={c_us:.1f} * {1 + step_tol:.2f} — the overlapped "
+            "warm compile stalled the phase boundary longer than the cold "
+            "recompile it replaces")
+    else:
+        print(f"  directional ok: engine/phase_transition_warm_us="
+              f"{w_us:.1f} <= cold_us={c_us:.1f} "
+              f"(+{step_tol * 100:.0f}% tol)")
     return failures
 
 

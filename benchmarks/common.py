@@ -4,7 +4,9 @@ All accuracy-bearing experiments run the *faithful* path: the event-driven
 parameter-server simulator with real JAX gradients on a slim ResNet over
 synthetic CIFAR-like data (CPU-scale stand-in for CIFAR-100 — see
 repro/data/synthetic.py), with simulated wall-clock from the paper's Eq. 2
-time model.
+time model.  Batches flow through the ``repro.data.DataPlane`` (the same
+canonical per-worker streams the SPMD engine consumes); ``make_fns`` keeps
+a legacy ``data_fn`` for callers that drive ``simulate()`` directly.
 """
 from __future__ import annotations
 
@@ -91,8 +93,10 @@ def run_dbl(*, n_small: int, k: float = 1.05, factor: str = "ds_over_dl",
                     batch_size=B_L, epochs=epochs, plan=plan,
                     lr_for_epoch=staged_lr([epochs * 3 // 4, epochs],
                                            [lr, lr / 5])),)
+    from repro.data import DataPlane
     backend = PsSimBackend(lambda r: make_fns(cfg, data, r), tm=tm,
-                           axis="resolution", sync=sync, jitter=jitter)
+                           axis="resolution", sync=sync, jitter=jitter,
+                           plane=DataPlane(data, seed=seed))
     res = backend.run(phases, p0, seed=seed)
     return res.last, res.time, res.params, plan
 
@@ -123,8 +127,10 @@ def run_hybrid(*, n_small: int, k: float = 1.05,
             phases.append(Phase(input_size=r, n_steps=0, lr=stage_lr,
                                 batch_size=bl_r,
                                 epochs=max(1, sub_epochs // 2), plan=plan))
+    from repro.data import DataPlane
     backend = PsSimBackend(lambda r: make_fns(cfg, data, r), tm=tm,
-                           axis="resolution", sync=ASP(), ref_size=r_max)
+                           axis="resolution", sync=ASP(), ref_size=r_max,
+                           plane=DataPlane(data, seed=seed))
     res = backend.run(tuple(phases), params, seed=seed)
     # final eval at full resolution
     _, _, eval_fn = make_fns(cfg, data, r_max)

@@ -20,13 +20,15 @@ def main(argv=None) -> None:
                     help="run a single module (e.g. table3)")
     args = ap.parse_args(argv)
 
-    from benchmarks import (engine_step, fig13_max_batch, ps_sim_throughput,
-                            roofline, sync_compare, table3_update_factor,
-                            table4_time_prediction, table5_worker_sweep,
-                            table8_hybrid_cifar, table10_hybrid_imagenet)
+    from benchmarks import (engine_step, fig13_max_batch, phase_transition,
+                            ps_sim_throughput, roofline, sync_compare,
+                            table3_update_factor, table4_time_prediction,
+                            table5_worker_sweep, table8_hybrid_cifar,
+                            table10_hybrid_imagenet)
     mods = {
         "table4": table4_time_prediction,   # time model first (cheap)
         "engine": engine_step,              # fused vs unfused server update
+        "phase": phase_transition,          # overlapped warm compile win
         "ps_sim": ps_sim_throughput,        # compiled-update cache win
         "table10": table10_hybrid_imagenet,
         "fig13": fig13_max_batch,

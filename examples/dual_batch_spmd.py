@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from repro import models
 from repro.configs import get_config, reduced
 from repro.core import LinearTimeModel, solve_plan
+from repro.data import DataPlane, SyntheticTokens
 from repro.engine import SpmdBackend, TrainEngine, single_phase
 from repro.optim import sgd_momentum
 
@@ -35,14 +36,12 @@ print(f"plan: B_S={plan.B_S} factor={plan.update_factor_small:.3f}; "
 opt = sgd_momentum(0.9)
 engine = TrainEngine(cfg, opt, mesh=mesh)
 
-tok = jax.random.randint(jax.random.PRNGKey(1), (16, 64), 0, cfg.vocab_size)
+# the DataPlane serves the mesh path too (plain batch_fn contract; the
+# scan feed / compile overlap are single-device features and stay off)
+plane = DataPlane(SyntheticTokens(vocab=cfg.vocab_size, seed=1,
+                                  n_examples=1024), seed=1)
 
-
-def batch_fn(phase, gstep):
-    return {"tokens": tok, "labels": tok}
-
-
-res = SpmdBackend(engine, batch_fn).run(phases, params, log_every=3)
+res = SpmdBackend(engine, plane).run(phases, params, log_every=3)
 params = res.params
 for h in res.history:
     print(f"step {h['step']}: loss {h['loss']:.4f}")

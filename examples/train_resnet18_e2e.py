@@ -18,7 +18,7 @@ from repro import models
 from repro.cluster import ASP, BSP
 from repro.configs import get_config
 from repro.core import LinearTimeModel, hybrid_schedule, solve_plan
-from repro.data import SyntheticImages
+from repro.data import DataPlane, SyntheticImages
 from repro.engine import phases_from_hybrid, run_sim, single_phase
 
 
@@ -47,10 +47,9 @@ def main():
         def grad_fn(p, batch):
             return jax.grad(lambda pp: models.loss_fn(pp, cfg, batch)[0])(p)
 
-        def data_fn(rng, wid, bsz):
-            idx = rng.integers(0, len(data), size=bsz)
-            return {k: jnp.asarray(v)
-                    for k, v in data.train_batch(idx, resolution).items()}
+        # batches come from the DataPlane (host-side resize to each phase's
+        # resolution, canonical per-worker streams); the factory only
+        # supplies gradients + eval
         test = {k: jnp.asarray(v) for k, v in
                 data.test_set(resolution).items()}
         ev = jax.jit(lambda p: models.loss_fn(p, cfg, test))
@@ -59,7 +58,7 @@ def main():
             l, m = ev(p)
             return {"test_loss": round(float(l), 3),
                     "test_acc": round(float(m["accuracy"]), 3)}
-        return grad_fn, data_fn, eval_fn
+        return grad_fn, None, eval_fn
 
     def init():
         return models.init_params(cfg, jax.random.PRNGKey(0))
@@ -73,7 +72,8 @@ def main():
                           epochs=epochs * 3 // 4) \
         + single_phase(input_size=32, n_steps=0, lr=0.01, batch_size=B_L,
                        plan=plan0, epochs=epochs - epochs * 3 // 4)
-    res = run_sim(phases, init(), fns_factory, tm=tm, sync=BSP())
+    res = run_sim(phases, init(), fns_factory, tm=tm, sync=BSP(),
+                  plane=DataPlane(data, seed=0))
     results["baseline"] = (res.last, res.time)
 
     # --- dual-batch learning (ASP, 3 small workers, k=1.05) --------------
@@ -83,7 +83,8 @@ def main():
                           epochs=epochs * 3 // 4) \
         + single_phase(input_size=32, n_steps=0, lr=0.01, batch_size=B_L,
                        plan=plan, epochs=epochs - epochs * 3 // 4)
-    res = run_sim(phases, init(), fns_factory, tm=tm, sync=ASP())
+    res = run_sim(phases, init(), fns_factory, tm=tm, sync=ASP(),
+                  plane=DataPlane(data, seed=0))
     results["dual-batch"] = (res.last, res.time)
 
     # --- hybrid: CPL sub-stages 24 -> 32 under each LR stage -------------
@@ -95,7 +96,7 @@ def main():
     phases = phases_from_hybrid(hp, total_steps=0, global_batch=B_L,
                                 axis="resolution")
     res = run_sim(phases, init(), fns_factory, tm=tm, sync=ASP(),
-                  axis="resolution")
+                  axis="resolution", plane=DataPlane(data, seed=0))
     _, _, eval_fn = fns_factory(32)
     last = {**res.last, **eval_fn(res.params)}
     results["hybrid"] = (last, res.time)

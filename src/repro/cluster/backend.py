@@ -24,6 +24,14 @@ Both accept initial params either as the public pytree or as a flat store
 (``repro.core.flat.FlatParams``, e.g. restored from a checkpoint into the
 fused hot path's representation) — flat input is unwrapped through the
 codec at entry, and checkpoints always keep the public pytree format.
+
+Both consume the ``repro.data.DataPlane`` (one resolution-aware input
+pipeline): ``PsSimBackend(..., plane=plane)`` replaces the factory's
+``data_fn`` with the plane's per-worker counter streams, and
+``SpmdBackend`` binds a plane passed as ``batch_fn`` to the schedule and
+overlaps the next phase's compile with the current phase's execution
+(``TrainEngine.schedule_warm``) so cyclic resolution transitions don't
+stall the hot loop.
 """
 from __future__ import annotations
 
@@ -120,6 +128,12 @@ class PsSimBackend:
     cluster); each is rescaled per phase by the input-size cost ratio.
     jitter / events_for_phase: straggler injection and elastic membership
     (see ``repro.cluster.topology``).
+    plane: a ``repro.data.DataPlane`` supplying every worker's batches from
+    the canonical per-(phase, worker, step) sample streams; when given, the
+    factory's ``data_fn`` slot is ignored (it may return None there) and
+    the same plane fed to an ``SpmdBackend`` draws from identical
+    per-worker streams — sample-for-sample equal in the canonical
+    B_L-wide-row geometry (``repro.engine.parity.check_data_plane_parity``).
     """
     name = "ps_sim"
 
@@ -128,7 +142,8 @@ class PsSimBackend:
                  momentum: float = 0.9, ref_size: Optional[int] = None,
                  jitter=0.0,
                  events_for_phase: Optional[
-                     Callable[[int, Any], Sequence[ClusterEvent]]] = None):
+                     Callable[[int, Any], Sequence[ClusterEvent]]] = None,
+                 plane=None):
         self._factory = fns_factory
         self._fns_cache: dict = {}
         self.tm = tm
@@ -138,6 +153,7 @@ class PsSimBackend:
         self.ref_size = ref_size
         self.jitter = jitter
         self.events_for_phase = events_for_phase
+        self.plane = plane
 
     def _fns(self, input_size: int):
         if input_size not in self._fns_cache:
@@ -154,6 +170,8 @@ class PsSimBackend:
             ckpt_dir: Optional[str] = None,
             resume: bool = False) -> RunResult:
         params = _as_tree(params)
+        if self.plane is not None:
+            self.plane.bind(phases)
         ref_size = self.ref_size or max(p.input_size for p in phases)
         like = {"params": params, "clock": np.zeros((), np.float64),
                 "epochs": np.zeros((), np.int64)}
@@ -175,6 +193,11 @@ class PsSimBackend:
             workers = workers_from_plan(phase.plan, tm_sub,
                                         jitter=self.jitter)
             grad_fn, data_fn, eval_fn = self._fns(phase.input_size)
+            if self.plane is not None:
+                data_fn = self.plane.sim_data_fn(i, phase)
+            elif data_fn is None:
+                raise ValueError("fns_factory returned data_fn=None; pass "
+                                 "plane=DataPlane(...) to supply batches")
             lr_fn = phase.lr_for_epoch or (lambda e, lr=phase.lr: lr)
             events = (self.events_for_phase(i, phase)
                       if self.events_for_phase else ())
@@ -210,6 +233,13 @@ class SpmdBackend:
     at a time so the same checkpoint/resume contract as ``PsSimBackend``
     holds at phase boundaries; the engine's compiled-step cache persists
     across phases, so per-phase dispatch adds no recompiles.
+
+    A ``repro.data.DataPlane`` passed as ``batch_fn`` is bound to the full
+    schedule up front, and before dispatching each phase the NEXT phase's
+    executable is handed to ``TrainEngine.schedule_warm`` — the engine
+    AOT-compiles it on a background thread while the current phase trains,
+    so phase-at-a-time dispatch keeps the compile overlap a whole-schedule
+    ``engine.run`` would have.
     """
     name = "spmd"
 
@@ -222,6 +252,8 @@ class SpmdBackend:
             log_every: int = 20,
             log_fn: Optional[Callable[[dict], None]] = None) -> RunResult:
         params = _as_tree(params)
+        if hasattr(self.batch_fn, "bind"):
+            self.batch_fn.bind(phases)
         if opt_state is None:
             opt_state = self.engine.optimizer.init(params)
         like = {"params": params, "opt_state": opt_state}
@@ -239,11 +271,17 @@ class SpmdBackend:
         t_total = 0.0
         for i in range(start, len(phases)):
             phase = phases[i]
+            if i + 1 < len(phases) and hasattr(self.engine,
+                                               "schedule_warm"):
+                # overlap phase i+1's compile with phase i's execution
+                self.engine.schedule_warm(phases[i + 1], params, opt_state,
+                                          self.batch_fn)
             t0 = time.time()
             params, opt_state, hist = self.engine.run(
                 [phase], params, opt_state, self.batch_fn, seed=seed,
                 start_step=gstep, start_samples=samples,
-                wall_offset=t_total, log_every=log_every, log_fn=log_fn)
+                wall_offset=t_total, log_every=log_every, log_fn=log_fn,
+                phase_offset=i)
             dt = time.time() - t0
             for rec in hist:
                 history.append({**rec, "phase": i})

@@ -31,11 +31,19 @@ def adapt_batch(B_ref: int, ref_size: int, size: int, *,
                 mem_fixed_frac: float = 0.0) -> int:
     """Adapt batch size to input size at constant memory (paper §4.1).
 
-    Activation memory scales with r^2 (images) or s (sequence length); with a
-    fixed-parameter fraction ``mem_fixed_frac`` of the budget, the adapted
-    batch solves  (1-f)·M = B·act(size):
+    Per-sample memory is  m(size) = m_fix + m_act·act(size)  with
+    ``act`` = r² (images) or s (sequence length) and ``mem_fixed_frac``
+    (f) the fraction of the per-sample footprint that does NOT scale with
+    the input — measured at the reference size: f = m_fix / m(ref).
+    Holding the budget M = B_ref·m(ref) fixed and solving M = B·m(size):
 
-        B(size) = B_ref · (act(ref)/act(size))
+        B(size) = B_ref · ratio / (f·ratio + (1 − f)),
+        ratio   = act(ref) / act(size)
+
+    f = 0 recovers the pure activation-proportional rule
+    B_ref·act(ref)/act(size); f = 1 pins the batch at B_ref.  The paper's
+    profiler-measured Table 6 ratios include such a size-independent term,
+    which is why the pure rule over-predicts small-resolution batches.
     """
     if axis == "resolution":
         ratio = (ref_size / size) ** 2
@@ -43,7 +51,10 @@ def adapt_batch(B_ref: int, ref_size: int, size: int, *,
         ratio = ref_size / size
     else:
         raise ValueError(axis)
-    return max(1, int(B_ref * ratio))
+    f = float(mem_fixed_frac)
+    if not 0.0 <= f <= 1.0:
+        raise ValueError(f"mem_fixed_frac must be in [0, 1], got {f}")
+    return max(1, int(B_ref * ratio / (f * ratio + (1.0 - f))))
 
 
 def cyclic_schedule(*, stages: Sequence[int], stage_lrs: Sequence[float],

@@ -1,6 +1,11 @@
-from repro.data.pipeline import (allocate_worker_indices, epoch_global_batches,
+from repro.data.pipeline import (allocate_worker_indices, bilinear_resize,
+                                 crop_tokens, epoch_global_batches,
+                                 resize_images, stream_indices,
                                  worker_batches)
+from repro.data.plane import DataPlane
 from repro.data.synthetic import SyntheticImages, SyntheticTokens
 
-__all__ = ["SyntheticImages", "SyntheticTokens", "allocate_worker_indices",
-           "worker_batches", "epoch_global_batches"]
+__all__ = ["DataPlane", "SyntheticImages", "SyntheticTokens",
+           "allocate_worker_indices", "bilinear_resize", "crop_tokens",
+           "epoch_global_batches", "resize_images", "stream_indices",
+           "worker_batches"]

@@ -1,0 +1,233 @@
+"""The DataPlane: ONE resolution-aware input pipeline for both backends.
+
+Before this subsystem the repo had three divergent data paths — the
+``data/pipeline`` index math, the PS simulator's
+``data_fn(np.random.Generator, wid, bsz)`` closures, and the engine's
+host-stacked scan chunks — each re-implementing sampling, resolution
+resizing and device staging.  The ``DataPlane`` subsumes all three behind
+one object:
+
+  * **canonical sample streams** — every batch is drawn from
+    ``pipeline.stream_indices``, keyed on ``(seed, phase, worker, step)``
+    and therefore identical between the event-driven PS simulator (draws
+    in event order) and the SPMD engine (draws in global-step order)
+    whenever both sides request the same per-worker batch size at the
+    same ``(phase, worker, step)``.  In the canonical dual-batch geometry
+    — worker rows padded to B_L width, i.e. ``global_batch = n_workers ·
+    B_L`` so ``per_worker == B_L`` and ``small_valid == B_S`` — worker
+    *w*'s *t*-th batch IS the same samples on both backends (asserted
+    against the simulator's real ``WorkerSpec`` batch sizes by
+    ``repro.engine.parity.check_data_plane_parity``); under a narrower
+    SPMD batch the engine consumes a per-worker subset of the same
+    stream family;
+  * **resolution awareness** — batches materialize host-side at each
+    ``Phase.input_size`` (images resize bilinearly, token walks crop to a
+    prefix), with ``core.progressive.adapt_batch`` sizing the phase batch
+    so the accelerator stays saturated across the cyclic schedule;
+  * **double-buffered scan feed** — ``scan_feed`` stages the NEXT chunk
+    (host stack + ``jax.device_put``) on a background thread while the
+    engine's compiled scan runs the current one, so the hot loop never
+    waits on host-side resize/stack;
+  * **warm-compile structs** — ``batch_struct`` hands the engine abstract
+    ``ShapeDtypeStruct``s for any phase WITHOUT materializing data, which
+    is what lets the engine AOT-lower/compile phase *k+1* while phase *k*
+    executes (``TrainEngine(overlap_compile=True)``).
+
+Contracts served:
+
+    plane(phase, gstep)            -> batch dict   (engine ``batch_fn``)
+    plane.sim_data_fn(i, phase)    -> data_fn      (PS-sim contract)
+    plane.scan_feed(phase, g0, n, chunk)           (engine scan path)
+    plane.batch_struct(phase[, stacked])           (overlap compile)
+
+``bind(phases)`` pins the schedule so a ``Phase`` object resolves to its
+index (and absolute start step); both cluster backends bind automatically.
+"""
+from __future__ import annotations
+
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Iterator, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.data.pipeline import stream_indices
+
+
+class DataPlane:
+    """One input pipeline for every backend (see module docstring).
+
+    source: anything speaking the source contract — ``len(source)``,
+      ``batch_at(indices, input_size)``, ``struct(batch, input_size)``
+      (``repro.data.synthetic`` datasets do).
+    seed: stream seed; per-phase streams depend only on ``(seed, phase
+      index)``, so a phase-boundary resume replays the uninterrupted run.
+    prefetch: double-buffer ``scan_feed`` chunks on a background thread
+      (False = stage synchronously; determinism is identical either way).
+    """
+
+    def __init__(self, source, *, seed: int = 0, prefetch: bool = True):
+        self.source = source
+        self.seed = int(seed)
+        self.prefetch = bool(prefetch)
+        self._phases: Optional[Tuple] = None
+        self._starts: Tuple[int, ...] = ()
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._pool_lock = threading.Lock()
+
+    # -- schedule binding ------------------------------------------------
+    def bind(self, phases: Sequence) -> "DataPlane":
+        """Pin the phase list so ``Phase`` objects resolve to stream
+        indices/start steps.  Called by the backends; idempotent."""
+        phases = tuple(phases)
+        starts, ofs = [], 0
+        for p in phases:
+            starts.append(ofs)
+            ofs += p.n_steps
+        self._phases = phases
+        self._starts = tuple(starts)
+        return self
+
+    @property
+    def bound(self) -> bool:
+        return self._phases is not None
+
+    def _locate(self, phase) -> Tuple[int, int]:
+        """(phase index, absolute start step) for ``phase``.  Identity
+        wins; the equality fallback (for reconstructed Phase objects, e.g.
+        after a checkpoint restore) refuses ambiguous matches — a cyclic
+        schedule may legitimately contain equal phases, and silently
+        serving the first one's stream would replay its samples."""
+        if self._phases is None:
+            return 0, 0
+        for i, p in enumerate(self._phases):
+            if p is phase:
+                return i, self._starts[i]
+        eq = [i for i, p in enumerate(self._phases) if p == phase]
+        if len(eq) == 1:
+            return eq[0], self._starts[eq[0]]
+        if eq:
+            raise ValueError(
+                f"phase equals schedule entries {eq} — ambiguous; pass the "
+                "bound Phase object itself (identity) to disambiguate")
+        raise ValueError("phase not in the bound schedule — rebind the "
+                         "DataPlane with the phase list it is serving")
+
+    # -- canonical streams ----------------------------------------------
+    def worker_rows(self, phase):
+        """Per worker-row block of the global padded batch:
+        ``(wid, valid, rows)`` — ``valid`` samples drawn from the worker's
+        stream, padded to ``rows`` (padding repeats the last valid sample;
+        those rows carry weight 0 / are never indexed by the fused step)."""
+        layout = phase.layout
+        if layout is None:
+            return [(0, phase.batch_size, phase.batch_size)]
+        pw = layout.per_worker
+        n_large = layout.n_workers - layout.n_small
+        return [(w, pw if w < n_large else max(1, layout.small_valid), pw)
+                for w in range(layout.n_workers)]
+
+    def worker_indices(self, phase_idx: int, wid: int, step: int,
+                       n: int) -> np.ndarray:
+        """Worker ``wid``'s ``step``-th draw of ``n`` sample indices in
+        phase ``phase_idx`` — THE canonical stream both backends consume."""
+        return stream_indices(len(self.source), n, seed=self.seed,
+                              phase=phase_idx, wid=wid, step=step)
+
+    def global_indices(self, phase, local_step: int) -> np.ndarray:
+        """The SPMD global batch's sample indices at phase-local step
+        ``local_step``: per-worker draws concatenated in worker order."""
+        pi, _ = self._locate(phase)
+        parts = []
+        for w, valid, rows in self.worker_rows(phase):
+            idx = self.worker_indices(pi, w, local_step, valid)
+            if rows > valid:
+                idx = np.concatenate(
+                    [idx, np.repeat(idx[-1], rows - valid)])
+            parts.append(idx)
+        return np.concatenate(parts)
+
+    # -- engine batch_fn contract ----------------------------------------
+    def __call__(self, phase, gstep: int) -> dict:
+        """batch_fn(phase, global_step) -> host batch dict at the phase's
+        input size.  Stateless in ``gstep`` (streams are counter-keyed),
+        so resumed runs replay the uninterrupted stream exactly."""
+        pi, start = self._locate(phase)
+        idx = self.global_indices(phase, gstep - start)
+        return self.source.batch_at(idx, phase.input_size)
+
+    def batch_struct(self, phase, stacked: Optional[int] = None) -> dict:
+        """Abstract batch structure for ``phase`` (leading ``stacked``
+        steps axis when given) — no data materialized; feeds the engine's
+        overlapped next-phase warm-compile."""
+        import jax
+        out = {}
+        for k, (shape, dt) in self.source.struct(phase.batch_size,
+                                                 phase.input_size).items():
+            full = ((stacked,) + tuple(shape)) if stacked else tuple(shape)
+            out[k] = jax.ShapeDtypeStruct(full, dt)
+        return out
+
+    # -- PS-sim contract --------------------------------------------------
+    def sim_data_fn(self, phase_idx: int, phase):
+        """``data_fn(rng, wid, bsz)`` for one simulator phase.  Ignores the
+        simulator's shared rng: draws come from the per-worker counter
+        stream instead, so the sample sequence is independent of event
+        interleaving — and identical to the SPMD side's worker rows when
+        the geometries align (``bsz`` equals the row's valid count; see
+        the module docstring)."""
+        import jax.numpy as jnp
+        counters: dict = {}
+
+        def data_fn(rng, wid, bsz):
+            t = counters.get(wid, 0)
+            counters[wid] = t + 1
+            idx = self.worker_indices(phase_idx, wid, t, bsz)
+            b = self.source.batch_at(idx, phase.input_size)
+            return {k: jnp.asarray(v) for k, v in b.items()}
+        return data_fn
+
+    # -- double-buffered scan feed ----------------------------------------
+    def _executor(self) -> ThreadPoolExecutor:
+        with self._pool_lock:
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=1, thread_name_prefix="dataplane-prefetch")
+            return self._pool
+
+    def _stage_chunk(self, phase, g0: int, c: int):
+        """Host-build + stack ``c`` consecutive batches and start their
+        device upload (one ``device_put`` per key, no device round trip)."""
+        import jax
+        batches = [self(phase, g0 + j) for j in range(c)]
+        stacked = {k: np.stack([b[k] for b in batches])
+                   for k in batches[0]}
+        return jax.device_put(stacked)
+
+    def scan_feed(self, phase, start: int, n_steps: int,
+                  chunk: int) -> Iterator[Tuple[int, dict]]:
+        """Yield ``(c, device_batches)`` chunks covering ``n_steps`` steps
+        from absolute step ``start``.  With ``prefetch`` the next chunk is
+        staged on the background thread while the caller's compiled scan
+        consumes the current one — the double buffer."""
+        sizes, rem = [], n_steps
+        while rem:
+            c = min(rem, chunk)
+            sizes.append(c)
+            rem -= c
+        if not self.prefetch or len(sizes) <= 1:
+            g0 = start
+            for c in sizes:
+                yield c, self._stage_chunk(phase, g0, c)
+                g0 += c
+            return
+        ex = self._executor()
+        g0 = start
+        fut = ex.submit(self._stage_chunk, phase, g0, sizes[0])
+        for i, c in enumerate(sizes):
+            staged = fut.result()
+            if i + 1 < len(sizes):
+                fut = ex.submit(self._stage_chunk, phase, g0 + c,
+                                sizes[i + 1])
+            yield c, staged
+            g0 += c

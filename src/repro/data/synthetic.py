@@ -6,10 +6,27 @@ low-frequency templates + noise (so small models separate them after a few
 epochs, and *resolution carries information* — downsampled images are
 genuinely easier/coarser, matching the paper's progressive-resolution
 premise), and LM tokens follow a class-dependent Markov chain.
+
+Both datasets speak the ``DataPlane`` source contract
+(``repro.data.plane``):
+
+    len(source)                       virtual dataset size
+    source.batch_at(indices, size)    indexed, deterministic batch at the
+                                      phase's input size (images resize,
+                                      token walks crop to a prefix)
+    source.struct(batch, size)        {key: (shape, dtype)} without
+                                      materializing data (warm-compile)
+
+``SyntheticTokens.batch_at`` is *prefix-stable*: example ``i`` at seq 64 is
+the literal prefix of example ``i`` at seq 128 (class, start token and the
+uniform draws are consumed in a fixed order), so cyclic seq-len schedules
+train on consistent streams across sub-stages.
 """
 from __future__ import annotations
 
 import numpy as np
+
+from repro.data.pipeline import bilinear_resize, resize_images
 
 
 class SyntheticImages:
@@ -24,7 +41,7 @@ class SyntheticImages:
         # low-frequency class templates: random 4x4 upsampled to base_res
         low = rng.randn(num_classes, 4, 4, 3).astype(np.float32)
         self.templates = np.stack([
-            _bilinear_resize(low[c], base_res) for c in range(num_classes)])
+            bilinear_resize(low[c], base_res) for c in range(num_classes)])
         self.noise = noise
         self._rng = rng
         self.train_labels = rng.randint(0, num_classes, size=n_train)
@@ -36,9 +53,7 @@ class SyntheticImages:
 
     def _images(self, labels, noise_bank, resolution: int):
         imgs = self.templates[labels] + self.noise * noise_bank
-        if resolution != self.base_res:
-            imgs = np.stack([_bilinear_resize(im, resolution) for im in imgs])
-        return imgs.astype(np.float32)
+        return resize_images(imgs, resolution)
 
     def train_batch(self, idx, resolution: int):
         idx = np.asarray(idx)
@@ -55,37 +70,40 @@ class SyntheticImages:
     def __len__(self):
         return len(self.train_labels)
 
+    # -- DataPlane source contract --------------------------------------
+    def batch_at(self, indices, input_size: int):
+        return self.train_batch(indices, input_size)
 
-def _bilinear_resize(img: np.ndarray, out: int) -> np.ndarray:
-    """Tiny dependency-free bilinear resize, (H, W, C) -> (out, out, C)."""
-    h, w, c = img.shape
-    ys = np.linspace(0, h - 1, out)
-    xs = np.linspace(0, w - 1, out)
-    y0 = np.floor(ys).astype(int); y1 = np.minimum(y0 + 1, h - 1)
-    x0 = np.floor(xs).astype(int); x1 = np.minimum(x0 + 1, w - 1)
-    wy = (ys - y0)[:, None, None]
-    wx = (xs - x0)[None, :, None]
-    a = img[y0][:, x0]; b = img[y0][:, x1]
-    cc = img[y1][:, x0]; d = img[y1][:, x1]
-    top = a * (1 - wx) + b * wx
-    bot = cc * (1 - wx) + d * wx
-    return (top * (1 - wy) + bot * wy).astype(np.float32)
+    def struct(self, batch: int, input_size: int):
+        return {"images": ((batch, input_size, input_size, 3), np.float32),
+                "labels": ((batch,), np.int32)}
 
 
 class SyntheticTokens:
     """LM data: per-sequence latent class selects a Markov transition matrix,
-    so next-token prediction is learnable (entropy << uniform)."""
+    so next-token prediction is learnable (entropy << uniform).
+
+    ``n_examples`` bounds the indexed (``batch_at``) view — example ``i`` is
+    a deterministic walk seeded from ``(seed, i)``, generated lazily and
+    prefix-stable across sequence lengths.
+    """
 
     def __init__(self, *, vocab: int = 256, num_classes: int = 8,
-                 concentration: float = 0.05, seed: int = 0):
+                 concentration: float = 0.05, seed: int = 0,
+                 n_examples: int = 4096):
         rng = np.random.RandomState(seed)
         self.vocab = vocab
         mats = rng.dirichlet(np.full(vocab, concentration),
                              size=(num_classes, vocab)).astype(np.float64)
         self.trans = mats / mats.sum(-1, keepdims=True)
         self.num_classes = num_classes
+        self.n_examples = int(n_examples)
+        self.seed = seed
+        self._cum = np.cumsum(self.trans, axis=-1)
 
     def batch(self, rng: np.random.RandomState, batch: int, seq: int):
+        """Legacy rng-driven sampling (stream depends on the caller's rng
+        state); prefer ``batch_at`` for order-independent determinism."""
         toks = np.zeros((batch, seq + 1), np.int32)
         cls = rng.randint(0, self.num_classes, size=batch)
         toks[:, 0] = rng.randint(0, self.vocab, size=batch)
@@ -94,3 +112,35 @@ class SyntheticTokens:
                 p = self.trans[cls[b], toks[b, t]]
                 toks[b, t + 1] = rng.choice(self.vocab, p=p)
         return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def _walk(self, idx: int, seq: int) -> np.ndarray:
+        """Deterministic (seq+1,) walk for example ``idx``.  Class, start
+        token and the per-step uniforms are consumed in a fixed order, so
+        ``_walk(i, s)`` is a prefix of ``_walk(i, s')`` for s < s'."""
+        rng = np.random.RandomState(
+            (1_000_003 * self.seed + 7919 * int(idx) + 13) % 2**32)
+        cls = rng.randint(self.num_classes)
+        toks = np.empty(seq + 1, np.int32)
+        toks[0] = rng.randint(self.vocab)
+        us = rng.random_sample(seq)
+        cum = self._cum[cls]
+        for t in range(seq):
+            toks[t + 1] = min(int(np.searchsorted(cum[toks[t]], us[t],
+                                                  side="right")),
+                              self.vocab - 1)
+        return toks
+
+    def __len__(self):
+        return self.n_examples
+
+    # -- DataPlane source contract --------------------------------------
+    def batch_at(self, indices, input_size: int):
+        # each walk is generated AT the requested length — prefix-stability
+        # lives in _walk's fixed draw order, not in a post-hoc crop
+        toks = np.stack([self._walk(i, input_size)
+                         for i in np.asarray(indices)])
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def struct(self, batch: int, input_size: int):
+        return {"tokens": ((batch, input_size), np.int32),
+                "labels": ((batch, input_size), np.int32)}

@@ -18,15 +18,28 @@ and ``core/spmd_dual_batch.py``:
     (``interpret=True`` fallback off-TPU, ``fused_merge=False`` for the
     unfused scale/add/apply sequence, ``scan_loop=False`` for the
     step-at-a-time fused path);
+  * **overlapped phase compilation** — while phase *k* executes, phase
+    *k+1*'s executable is AOT-lowered/compiled on a background thread
+    (``overlap_compile=True``), so cyclic resolution transitions stop
+    stalling the hot loop.  Requires a batch-structure provider
+    (``DataPlane.batch_struct``) so no data is materialized speculatively;
+    the per-boundary stall (cold compile vs warm wait) is recorded in
+    ``engine.stall_log`` and gated by ``benchmarks/phase_transition.py``;
+  * **DataPlane scan feed** — when ``batch_fn`` is a
+    ``repro.data.DataPlane``, scan chunks arrive through its
+    double-buffered ``scan_feed`` (next chunk host-staged + device_put
+    while the current compiled scan runs) instead of being stacked inline;
   * optional mesh: when given, params / optimizer state / batch shardings
     are derived from ``launch.sharding`` and attached to every compiled
     step, so the same schedule runs SPMD on the production mesh unchanged
     (the scan path is host-loop-free and currently single-device; mesh
-    runs keep the per-step loop).
+    runs keep the per-step loop and skip overlap compile).
 """
 from __future__ import annotations
 
+import threading
 import time
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Callable, Optional, Sequence
 
@@ -49,6 +62,16 @@ class StepKey:
     micro_steps: int
     kind: str                 # "weighted" | "micro" | "fused"
     drop_rate: float          # per-phase dropout (baked into the step)
+
+
+def _sds(x):
+    dt = x.dtype if hasattr(x, "dtype") else np.asarray(x).dtype
+    return jax.ShapeDtypeStruct(np.shape(x), dt)
+
+
+def _tree_struct(tree):
+    """Pytree of ``ShapeDtypeStruct``s mirroring ``tree`` (None-safe)."""
+    return jax.tree_util.tree_map(_sds, tree)
 
 
 class TrainEngine:
@@ -75,6 +98,11 @@ class TrainEngine:
       ``fused_merge=False``, or a mesh), because the per-step loop would
       silently drop the momentum; non-fused phases keep the optimizer's
       own update.
+    overlap_compile: AOT-compile the NEXT phase's executable on a
+      background thread while the current phase runs (no-mesh paths; needs
+      a ``batch_struct``-capable batch_fn such as ``DataPlane``).  The
+      boundary stall either way lands in ``engine.stall_log`` as
+      ``{"phase", "kind", "stall_s", "warm"}`` records.
     """
 
     def __init__(self, cfg, optimizer: Optimizer, *,
@@ -82,7 +110,8 @@ class TrainEngine:
                  drop_rate: float = 0.0, mesh=None, donate: bool = True,
                  interpret: Optional[bool] = None,
                  scan_loop="auto", scan_chunk: int = 32,
-                 server_momentum: float = 0.0):
+                 server_momentum: float = 0.0,
+                 overlap_compile: bool = True):
         self.cfg = cfg
         self.optimizer = optimizer
         self.fused_merge = fused_merge
@@ -94,6 +123,7 @@ class TrainEngine:
         self.scan_loop = scan_loop
         self.scan_chunk = int(scan_chunk)
         self.server_momentum = float(server_momentum)
+        self.overlap_compile = bool(overlap_compile)
         if self.server_momentum > 0 and (scan_loop is False
                                          or fused_merge is False
                                          or mesh is not None):
@@ -104,7 +134,15 @@ class TrainEngine:
                 "(scan_loop enabled, fused_merge on, no mesh)")
         self._cache: dict = {}
         self._phase_cache: dict = {}
+        self._warm_steps: dict = {}
+        self._inflight: dict = {}
+        self._lock = threading.Lock()
+        self._compiler: Optional[ThreadPoolExecutor] = None
         self.compile_count = 0
+        self.warm_scheduled = 0
+        self.warm_hits = 0
+        self.warm_errors = 0
+        self.stall_log: list = []
 
     # ------------------------------------------------------------------
     def _kind_for(self, phase: Phase) -> str:
@@ -133,25 +171,15 @@ class TrainEngine:
         default."""
         return phase.dropout if phase.dropout > 0 else self.drop_rate
 
+    def _step_key(self, phase: Phase) -> StepKey:
+        return StepKey(phase.input_size, phase.batch_size, phase.layout,
+                       phase.micro_steps, self._kind_for(phase),
+                       self._drop_rate_for(phase))
+
     def _build(self, key: StepKey):
-        if key.kind == "micro":
-            fn = make_micro_step(self.cfg, self.optimizer,
-                                 layout=key.layout,
-                                 micro_steps=key.micro_steps,
-                                 drop_rate=key.drop_rate)
-            static, donate = (), (0, 1)
-        elif key.kind == "fused":
-            fn = make_fused_dbl_step(self.cfg, key.layout,
-                                     drop_rate=key.drop_rate,
-                                     fused=self.fused_merge is not False,
-                                     interpret=self.interpret,
-                                     leafwise=self.mesh is not None)
-            static, donate = (3,), (0, 1)     # lr baked into the kernel
-        else:
-            fn = make_weighted_step(self.cfg, self.optimizer,
-                                    layout=key.layout,
-                                    drop_rate=key.drop_rate)
-            static, donate = (), (0, 1)
+        """Jitted (lazy-compiled) step for ``key`` — the building block
+        behind both the classic cache and the AOT warm compile."""
+        fn, static, donate = self._step_fn_parts(key)
         kw = {}
         if self.donate:
             kw["donate_argnums"] = donate
@@ -159,37 +187,290 @@ class TrainEngine:
         self.compile_count += 1
         return jitted
 
+    def _step_fn_parts(self, key: StepKey):
+        """(fn, static_argnums, donate_argnums) for a step kind."""
+        if key.kind == "micro":
+            fn = make_micro_step(self.cfg, self.optimizer,
+                                 layout=key.layout,
+                                 micro_steps=key.micro_steps,
+                                 drop_rate=key.drop_rate)
+            return fn, (), (0, 1)
+        if key.kind == "fused":
+            fn = make_fused_dbl_step(self.cfg, key.layout,
+                                     drop_rate=key.drop_rate,
+                                     fused=self.fused_merge is not False,
+                                     interpret=self.interpret,
+                                     leafwise=self.mesh is not None)
+            return fn, (3,), (0, 1)          # lr baked into the kernel
+        fn = make_weighted_step(self.cfg, self.optimizer,
+                                layout=key.layout,
+                                drop_rate=key.drop_rate)
+        return fn, (), (0, 1)
+
     def step_fn(self, phase: Phase):
         """Compiled step for this phase (cached across phases)."""
+        key = self._step_key(phase)
+        with self._lock:
+            if key not in self._cache:
+                self._cache[key] = self._build(key)
+            return self._cache[key]
+
+    def _scan_ck(self, phase: Phase, spec: FlatSpec, chunk: int):
         key = StepKey(phase.input_size, phase.batch_size, phase.layout,
-                      phase.micro_steps, self._kind_for(phase),
+                      phase.micro_steps, "fused",
                       self._drop_rate_for(phase))
-        if key not in self._cache:
-            self._cache[key] = self._build(key)
-        return self._cache[key]
+        return (key, float(phase.lr), id(spec), chunk)
+
+    def _phase_scan_jit(self, phase: Phase, spec: FlatSpec):
+        """Fresh jitted whole-chunk scan for a fused phase (uncompiled)."""
+        fn = make_fused_phase_scan(self.cfg, phase.layout, spec,
+                                   lr=phase.lr,
+                                   drop_rate=self._drop_rate_for(phase),
+                                   momentum=self.server_momentum,
+                                   interpret=self.interpret)
+        kw = {"donate_argnums": (0, 1)} if self.donate else {}
+        return jax.jit(fn, **kw)
 
     def phase_fn(self, phase: Phase, spec: FlatSpec, chunk: int):
         """Compiled whole-chunk scan for a fused phase (cached on the step
         key + lr + codec spec + chunk length; same-shaped phases at the
         same lr share one executable)."""
-        key = StepKey(phase.input_size, phase.batch_size, phase.layout,
-                      phase.micro_steps, "fused",
-                      self._drop_rate_for(phase))
-        ck = (key, float(phase.lr), id(spec), chunk)
-        if ck not in self._phase_cache:
-            fn = make_fused_phase_scan(self.cfg, phase.layout, spec,
-                                       lr=phase.lr,
-                                       drop_rate=key.drop_rate,
-                                       momentum=self.server_momentum,
-                                       interpret=self.interpret)
-            kw = {"donate_argnums": (0, 1)} if self.donate else {}
-            self._phase_cache[ck] = jax.jit(fn, **kw)
-            self.compile_count += 1
-        return self._phase_cache[ck]
+        ck = self._scan_ck(phase, spec, chunk)
+        with self._lock:
+            if ck not in self._phase_cache:
+                self._phase_cache[ck] = self._phase_scan_jit(phase, spec)
+                self.compile_count += 1
+            return self._phase_cache[ck]
 
     @property
     def cache_size(self) -> int:
-        return len(self._cache) + len(self._phase_cache)
+        return len(self._cache) + len(self._phase_cache) \
+            + len(self._warm_steps)
+
+    # ---------------------- overlapped warm compile --------------------
+    def _compile_pool(self) -> ThreadPoolExecutor:
+        if self._compiler is None:
+            self._compiler = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="warm-compile")
+        return self._compiler
+
+    def _chunk_lengths(self, n_steps: int):
+        """Distinct scan-chunk lengths a phase of ``n_steps`` will run."""
+        if n_steps <= 0:
+            return []
+        full = min(n_steps, self.scan_chunk)
+        out = [full]
+        rem = n_steps % full
+        if rem and rem != full:
+            out.append(rem)
+        return out
+
+    def _rngs_struct(self, drop: float, chunk: Optional[int]):
+        if drop <= 0:
+            return None
+        key = jax.ShapeDtypeStruct((2,), jnp.uint32)   # PRNGKey layout
+        return key if chunk is None else \
+            jax.ShapeDtypeStruct((chunk, 2), jnp.uint32)
+
+    def schedule_warm(self, phase: Phase, params, opt_state=None,
+                      batch_fn=None) -> bool:
+        """AOT-lower/compile ``phase``'s executable on the background
+        thread.  Call while the PREVIOUS phase is (about to start)
+        executing — e.g. the cluster backends call this for phase *k+1*
+        right before dispatching phase *k*.  Needs ``batch_fn`` to expose
+        ``batch_struct(phase, stacked)`` (``DataPlane`` does); returns
+        whether anything was scheduled."""
+        if not self.overlap_compile or self.mesh is not None:
+            return False
+        if batch_fn is None or not hasattr(batch_fn, "batch_struct"):
+            return False
+        kind = self._kind_for(phase)
+        if self._use_scan(kind):
+            spec = flat_spec(params)
+            vspec = (flat_spec(opt_state["v"])
+                     if self.server_momentum > 0 and isinstance(opt_state,
+                                                                dict)
+                     and "v" in opt_state else None)
+            return self._schedule_warm_scan(phase, spec, vspec, batch_fn)
+        return self._schedule_warm_step(phase, kind,
+                                        _tree_struct(params),
+                                        _tree_struct(opt_state), batch_fn)
+
+    def _schedule_warm_scan(self, phase: Phase, spec: FlatSpec,
+                            vspec: Optional[FlatSpec], batch_fn) -> bool:
+        """Background-compile every chunk length the phase will run."""
+        drop = self._drop_rate_for(phase)
+        scheduled = False
+        for c in self._chunk_lengths(phase.n_steps):
+            ck = self._scan_ck(phase, spec, c)
+            with self._lock:
+                cur = self._phase_cache.get(ck)
+                if (cur is not None and not _is_lazy(cur)) \
+                        or ck in self._inflight:
+                    continue
+            p2s = jax.ShapeDtypeStruct(spec.shape, jnp.float32)
+            v2s = (jax.ShapeDtypeStruct(vspec.shape, jnp.float32)
+                   if vspec is not None else None)
+            bst = batch_fn.batch_struct(phase, c)
+            rst = self._rngs_struct(drop, c)
+
+            def task(phase=phase, spec=spec, ck=ck, p2s=p2s, v2s=v2s,
+                     bst=bst, rst=rst):
+                try:
+                    jitted = self._phase_scan_jit(phase, spec)
+                    compiled = jitted.lower(p2s, v2s, bst, rst).compile()
+                except Exception:           # noqa: BLE001 — warm is advisory
+                    with self._lock:
+                        self.warm_errors += 1
+                    return None
+                with self._lock:
+                    self._phase_cache[ck] = compiled
+                    self.compile_count += 1
+                return compiled
+
+            with self._lock:
+                self._inflight[ck] = self._compile_pool().submit(task)
+                self.warm_scheduled += 1
+            scheduled = True
+        return scheduled
+
+    def _warm_step_key(self, key: StepKey, phase: Phase):
+        # fused per-step executables bake lr in (static argnum); the warm
+        # entry must therefore be lr-specific, unlike the classic cache
+        return (key, float(phase.lr) if key.kind == "fused" else None)
+
+    def _schedule_warm_step(self, phase: Phase, kind: str, params_struct,
+                            opt_struct, batch_fn) -> bool:
+        key = self._step_key(phase)
+        wkey = self._warm_step_key(key, phase)
+        with self._lock:
+            if wkey in self._warm_steps or wkey in self._inflight:
+                return False
+        bst = dict(batch_fn.batch_struct(phase, None))
+        if phase.layout is not None and kind == "weighted" \
+                and "weight" not in bst:
+            bst["weight"] = jax.ShapeDtypeStruct((phase.batch_size,),
+                                                 jnp.float32)
+        rst = self._rngs_struct(self._drop_rate_for(phase), None)
+        lr = float(phase.lr)
+
+        def task(key=key, wkey=wkey, bst=bst, rst=rst, lr=lr):
+            try:
+                fn, static, donate = self._step_fn_parts(key)
+                kw = {"donate_argnums": donate} if self.donate else {}
+                jitted = jax.jit(fn, static_argnums=static, **kw)
+                compiled = jitted.lower(params_struct, opt_struct, bst, lr,
+                                        rst).compile()
+                if key.kind == "fused":
+                    # Compiled drops static args: adapt to the engine's
+                    # uniform step(params, opt, batch, lr, rng) call
+                    wrapped = (lambda p, s, b, _lr, rng,
+                               c=compiled: c(p, s, b, rng))
+                else:
+                    wrapped = compiled
+            except Exception:               # noqa: BLE001 — warm is advisory
+                with self._lock:
+                    self.warm_errors += 1
+                return None
+            with self._lock:
+                self._warm_steps[wkey] = wrapped
+                self.compile_count += 1
+            return wrapped
+
+        with self._lock:
+            self._inflight[wkey] = self._compile_pool().submit(task)
+            self.warm_scheduled += 1
+        return True
+
+    def _await_warm(self, wkey):
+        """(entry, waited_s): pop any in-flight warm task for ``wkey`` and
+        wait it out; None entry means no warm result (caller compiles)."""
+        with self._lock:
+            fut = self._inflight.pop(wkey, None)
+        if fut is None:
+            return None, 0.0
+        t0 = time.perf_counter()
+        try:
+            entry = fut.result()
+        except Exception:                   # noqa: BLE001
+            entry = None
+        return entry, time.perf_counter() - t0
+
+    def _record_stall(self, pi: int, kind: str, stall_s: float, warm: bool):
+        self.stall_log.append({"phase": pi, "kind": kind,
+                               "stall_s": round(stall_s, 6), "warm": warm})
+
+    def _acquire_phase_fn(self, phase: Phase, spec: FlatSpec, c: int,
+                          p2, v2, batches, rngs):
+        """(fn, stall_s, warm): an executable for this chunk length —
+        warm-compiled (background), cached, or cold AOT-compiled inline.
+        ``stall_s`` is the wall time the hot loop waited for it."""
+        ck = self._scan_ck(phase, spec, c)
+        with self._lock:
+            fn = self._phase_cache.get(ck)
+            if fn is not None and not _is_lazy(fn):
+                self._inflight.pop(ck, None)    # done future, if any
+        if fn is not None and not _is_lazy(fn):
+            return fn, 0.0, True
+        warm, waited = self._await_warm(ck)
+        if warm is not None:
+            self.warm_hits += 1
+            return warm, waited, True
+        t0 = time.perf_counter()
+        jitted = fn if fn is not None else self._phase_scan_jit(phase, spec)
+        compiled = jitted.lower(_tree_struct(p2), _tree_struct(v2),
+                                _tree_struct(batches),
+                                _tree_struct(rngs)).compile()
+        with self._lock:
+            self._phase_cache[ck] = compiled
+            self.compile_count += 1
+        return compiled, waited + (time.perf_counter() - t0), False
+
+    def _acquire_step_fn(self, phase: Phase, params, opt_state, batch,
+                         drop_rng):
+        """(step, stall_s, warm): an executable for this phase's per-step
+        loop — warm-compiled (background), cached, or cold AOT-compiled
+        inline from the phase's first batch, so the boundary stall is
+        measured on this path exactly like the scan path (mesh runs keep
+        the lazily-jitted cache and bypass this)."""
+        key = self._step_key(phase)
+        wkey = self._warm_step_key(key, phase)
+        with self._lock:
+            warm = self._warm_steps.get(wkey)
+        if warm is not None:
+            self.warm_hits += 1
+            return warm, 0.0, True
+        warm, waited = self._await_warm(wkey)
+        if warm is not None:
+            self.warm_hits += 1
+            return warm, waited, True
+        with self._lock:
+            cached = self._cache.get(key)
+        if cached is not None and not _is_lazy(cached):
+            return cached, waited, True     # dynamic-lr Compiled, lr-agnostic
+        t0 = time.perf_counter()
+        if cached is not None:
+            jitted = cached
+        else:
+            fn, static, donate = self._step_fn_parts(key)
+            kw = {"donate_argnums": donate} if self.donate else {}
+            jitted = jax.jit(fn, static_argnums=static, **kw)
+        compiled = jitted.lower(params, opt_state, batch, float(phase.lr),
+                                drop_rng).compile()
+        if key.kind == "fused":
+            # lr is baked in (static argnum); keep the Compiled in the
+            # lr-keyed warm cache and adapt to the uniform call signature
+            step = (lambda p, s, b, _lr, rng,
+                    c=compiled: c(p, s, b, rng))
+            with self._lock:
+                self._warm_steps[wkey] = step
+                self.compile_count += 1
+        else:
+            step = compiled
+            with self._lock:
+                self._cache[key] = compiled
+                self.compile_count += 1
+        return step, waited + (time.perf_counter() - t0), False
 
     def _record(self, history, log_fn, *, gstep: int, pi: int, phase: Phase,
                 loss, samples_seen: int, t0: float, wall_offset: float):
@@ -214,23 +495,16 @@ class TrainEngine:
                 sh(batch_specs(batch, self.mesh)))
 
     # ------------------------------------------------------------------
-    def _run_phase_scan(self, phase: Phase, pi: int, spec: FlatSpec, p2, v2,
-                        batch_fn, rng, *, gstep: int, samples_seen: int,
-                        start_step: int, log_every: int, log_fn, history,
-                        t0: float, wall_offset: float):
-        """One fused phase as scan-compiled chunks on the flat store.
-
-        Takes and returns the flat ``(p2, v2)`` carry — ``run()`` owns
-        ravel/unravel at the flat↔pytree boundary, so consecutive scan
-        phases share one carry with no interior codec passes.  Drives
-        ``scan_chunk``-step compiled calls over host-pre-stacked batches.
-        Returns (p2, v2, gstep, samples_seen).
-        """
-        drop = self._drop_rate_for(phase)
-        remaining = phase.n_steps
+    def _chunk_feed(self, phase: Phase, batch_fn, start: int):
+        """(c, batches) chunks for the scan path: the DataPlane's
+        double-buffered feed when available, else inline host stacking."""
+        if hasattr(batch_fn, "scan_feed"):
+            yield from batch_fn.scan_feed(phase, start, phase.n_steps,
+                                          self.scan_chunk)
+            return
+        remaining, g0 = phase.n_steps, start
         while remaining:
             c = min(remaining, self.scan_chunk)
-            g0 = gstep
             staged = [batch_fn(phase, g0 + j) for j in range(c)]
             batches = {}
             for k in staged[0]:
@@ -240,9 +514,38 @@ class TrainEngine:
                 batches[k] = (jnp.stack(vals)
                               if isinstance(vals[0], jax.Array)
                               else jnp.asarray(np.stack(vals)))
+            yield c, batches
+            remaining -= c
+            g0 += c
+
+    def _run_phase_scan(self, phase: Phase, pi: int, spec: FlatSpec, p2, v2,
+                        batch_fn, rng, *, gstep: int, samples_seen: int,
+                        start_step: int, log_every: int, log_fn, history,
+                        t0: float, wall_offset: float,
+                        phase_offset: int = 0):
+        """One fused phase as scan-compiled chunks on the flat store.
+
+        Takes and returns the flat ``(p2, v2)`` carry — ``run()`` owns
+        ravel/unravel at the flat↔pytree boundary, so consecutive scan
+        phases share one carry with no interior codec passes.  Drives
+        ``scan_chunk``-step compiled calls over batches from the
+        ``DataPlane`` double-buffered feed (or inline stacking), with the
+        chunk executable acquired AOT — warm from the background compiler
+        when the previous phase overlapped it, cold otherwise; either way
+        the boundary stall lands in ``stall_log``.
+        Returns (p2, v2, gstep, samples_seen).
+        """
+        drop = self._drop_rate_for(phase)
+        first = True
+        for c, batches in self._chunk_feed(phase, batch_fn, gstep):
+            g0 = gstep
             rngs = (jax.vmap(lambda s: jax.random.fold_in(rng, s))(
                 jnp.arange(g0, g0 + c)) if drop > 0 else None)
-            fn = self.phase_fn(phase, spec, c)
+            fn, stall, warm = self._acquire_phase_fn(phase, spec, c,
+                                                     p2, v2, batches, rngs)
+            if first:
+                self._record_stall(pi + phase_offset, "scan", stall, warm)
+                first = False
             p2, v2, losses = fn(p2, v2, batches, rngs)
             losses = np.asarray(losses)     # one device sync per chunk
             for j in range(c):
@@ -253,7 +556,6 @@ class TrainEngine:
                                  phase=phase, loss=losses[j],
                                  samples_seen=samples_seen, t0=t0,
                                  wall_offset=wall_offset)
-            remaining -= c
         return p2, v2, gstep, samples_seen
 
     def run(self, phases: Sequence[Phase], params, opt_state,
@@ -261,16 +563,20 @@ class TrainEngine:
             seed: int = 0, log_every: int = 20,
             log_fn: Optional[Callable[[dict], None]] = None,
             start_step: int = 0, start_samples: int = 0,
-            wall_offset: float = 0.0):
+            wall_offset: float = 0.0, phase_offset: int = 0):
         """Run the whole schedule.
 
         batch_fn(phase, global_step) -> batch dict ("tokens"/"labels" or
         "images"/"labels"); the engine attaches the phase layout's weights.
-        ``start_step`` offsets the global step counter (and therefore the
-        dropout RNG stream and ``batch_fn`` indices) so a backend resuming
-        mid-schedule replays the uninterrupted run exactly;
-        ``start_samples``/``wall_offset`` keep the logged ``tokens`` and
-        ``wall_s`` counters cumulative under phase-at-a-time dispatch.
+        A ``DataPlane`` works directly as ``batch_fn`` and additionally
+        enables the double-buffered scan feed and overlapped next-phase
+        warm compile.  ``start_step`` offsets the global step counter (and
+        therefore the dropout RNG stream and ``batch_fn`` indices) so a
+        backend resuming mid-schedule replays the uninterrupted run
+        exactly; ``start_samples``/``wall_offset`` keep the logged
+        ``tokens`` and ``wall_s`` counters cumulative under
+        phase-at-a-time dispatch, and ``phase_offset`` keeps the
+        ``stall_log`` phase indices absolute there too.
         Returns (params, opt_state, history).
         """
         history = []
@@ -281,6 +587,9 @@ class TrainEngine:
         placed = None
         mom = self.server_momentum
         flat = None  # (spec, vspec, p2, v2): params/opt_state stale if set
+        if hasattr(batch_fn, "bind") and not getattr(batch_fn, "bound",
+                                                     True):
+            batch_fn.bind(phases)
 
         def materialize():
             """Leave the flat store: params/opt_state become current."""
@@ -293,6 +602,34 @@ class TrainEngine:
                     # from the params' (e.g. f32 state over bf16 params)
                     opt_state = dict(opt_state, v=vspec.unravel_jit(v2))
                 flat = None
+
+        def warm_next(pi):
+            """Overlap phase pi+1's compile with phase pi's execution."""
+            if pi + 1 >= len(phases) or not self.overlap_compile \
+                    or self.mesh is not None \
+                    or not hasattr(batch_fn, "batch_struct"):
+                return
+            nxt = phases[pi + 1]
+            kind = self._kind_for(nxt)
+            if self._use_scan(kind):
+                if flat is not None:
+                    spec_n, vspec_n = flat[0], flat[1]
+                else:
+                    spec_n = flat_spec(params)
+                    vspec_n = (flat_spec(opt_state["v"]) if mom > 0
+                               and isinstance(opt_state, dict)
+                               and "v" in opt_state else None)
+                self._schedule_warm_scan(nxt, spec_n, vspec_n, batch_fn)
+                return
+            if flat is not None:
+                spec_c = flat[0]
+                p_struct = jax.eval_shape(
+                    spec_c.unravel,
+                    jax.ShapeDtypeStruct(spec_c.shape, jnp.float32))
+            else:
+                p_struct = _tree_struct(params)
+            self._schedule_warm_step(nxt, kind, p_struct,
+                                     _tree_struct(opt_state), batch_fn)
 
         for pi, phase in enumerate(phases):
             kind = self._kind_for(phase)
@@ -311,12 +648,14 @@ class TrainEngine:
                         v2 = vspec.ravel_jit(opt_state["v"])
                 else:
                     spec, vspec, p2, v2 = flat
+                flat = (spec, vspec, p2, v2)
+                warm_next(pi)
                 p2, v2, gstep, samples_seen = self._run_phase_scan(
                     phase, pi, spec, p2, v2, batch_fn, rng,
                     gstep=gstep, samples_seen=samples_seen,
                     start_step=start_step, log_every=log_every,
                     log_fn=log_fn, history=history, t0=t0,
-                    wall_offset=wall_offset)
+                    wall_offset=wall_offset, phase_offset=phase_offset)
                 flat = (spec, vspec, p2, v2)
                 continue
             if mom > 0:
@@ -327,19 +666,31 @@ class TrainEngine:
                     "bypasses the fused scan path; PS-server momentum only "
                     "applies to fused dual-batch phases")
             materialize()
-            step = self.step_fn(phase)
+            warm_next(pi)
             bsh = None
             drop = self._drop_rate_for(phase)
             attach_w = (phase.layout is not None
                         and self._kind_for(phase) == "weighted")
             weights = (phase.layout.weights().astype(jnp.float32)
                        if attach_w else None)
-            for _ in range(phase.n_steps):
+            step = None
+            for j in range(phase.n_steps):
                 batch = batch_fn(phase, gstep)
                 if attach_w and "weight" not in batch:
                     batch = dict(batch, weight=weights)
                 drop_rng = (jax.random.fold_in(rng, gstep)
                             if drop > 0 else None)
+                if step is None:
+                    if self.mesh is None:
+                        # acquire an AOT executable from the first batch —
+                        # warm (background-compiled), cached, or cold; the
+                        # boundary stall is measured either way
+                        step, stall, warm = self._acquire_step_fn(
+                            phase, params, opt_state, batch, drop_rng)
+                        self._record_stall(pi + phase_offset, "step",
+                                           stall, warm)
+                    else:
+                        step = self.step_fn(phase)
                 if self.mesh is not None:
                     if placed is None:
                         psh, osh, bsh = self._shardings(params, opt_state,
@@ -365,3 +716,8 @@ class TrainEngine:
                                  wall_offset=wall_offset)
         materialize()
         return params, opt_state, history
+
+
+def _is_lazy(fn) -> bool:
+    """True for a lazily-compiling jitted function (vs an AOT Compiled)."""
+    return hasattr(fn, "lower")

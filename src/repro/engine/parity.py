@@ -22,6 +22,15 @@ Three assertions on a tiny model:
    SGD) consume an identical batch stream and must land on matching final
    params within fp32 tolerance.
 
+4. **DataPlane parity** — one ``repro.data.DataPlane`` feeds both
+   backends identical per-worker sample streams for the same seed/phase
+   list (the PS simulator draws in event order, the SPMD engine in
+   global-step order — the counter-keyed streams make the order
+   irrelevant), the plane-fed scan feed + overlapped warm compile is
+   bit-identical to the legacy inline-staged path, and a cyclic
+   progressive schedule runs end-to-end through the plane on both
+   backends.
+
 Run directly:  PYTHONPATH=src python -m repro.engine.parity
 """
 from __future__ import annotations
@@ -35,6 +44,7 @@ from repro.cluster import BSP, PsSimBackend, SpmdBackend
 from repro.configs import get_config, reduced
 from repro.core import (LinearTimeModel, WorkerSpec, simulate, solve_plan)
 from repro.core.spmd_dual_batch import SpmdDualBatch
+from repro.data import DataPlane, SyntheticTokens
 from repro.engine.engine import TrainEngine
 from repro.engine.phases import single_phase
 from repro.engine.steps import make_fused_dbl_step, make_weighted_step
@@ -180,11 +190,102 @@ def check_backend_parity(*, seed: int = 0, lr: float = 0.05,
             "spmd_steps": sum(r["steps"] for r in res_spmd.phases)}
 
 
+def check_data_plane_parity(*, seed: int = 0) -> dict:
+    """One DataPlane, two backends: (a) identical per-worker sample streams
+    regardless of draw order — with the simulator side drawing its REAL
+    ``WorkerSpec`` batch sizes, in the canonical geometry where worker rows
+    are B_L wide so those sizes coincide with the SPMD rows; (b) the
+    double-buffered scan feed + overlapped warm compile is bit-identical to
+    the legacy inline-staged loop; (c) a cyclic schedule runs end-to-end
+    through the plane on the PS-sim backend too."""
+    from repro.cluster import workers_from_plan
+    cfg, params, _ = _tiny_setup(seed)
+    tm = LinearTimeModel(a=1.0, b=24.6)
+    # canonical geometry: global_batch = n_workers * B_L, so the layout's
+    # per-worker row width IS B_L and small_valid IS B_S — the simulator's
+    # per-worker draws and the SPMD worker rows request identical sizes
+    plan = solve_plan(tm, B_L=2, d=64, n_workers=4, n_small=2, k=1.05)
+    phases = single_phase(input_size=16, n_steps=2, lr=0.01, batch_size=8,
+                          plan=plan, epochs=1) \
+        + single_phase(input_size=32, n_steps=2, lr=0.01, batch_size=8,
+                       plan=plan, epochs=1)
+    data = SyntheticTokens(vocab=cfg.vocab_size, seed=seed, n_examples=256)
+
+    # (a) per-worker stream identity: the simulator side draws per-worker
+    # batches in REVERSED worker order (event order is arbitrary) at the
+    # WorkerSpec batch sizes the real event loop would request; the SPMD
+    # side slices worker rows out of the global batch — both must see the
+    # canonical plane.worker_indices stream
+    plane = DataPlane(data, seed=seed).bind(phases)
+    specs = workers_from_plan(plan, tm)
+    checked = 0
+    for pi, phase in enumerate(phases):
+        rows = plane.worker_rows(phase)
+        assert [v for _, v, _ in rows] == [s.batch_size for s in specs], \
+            "geometry not aligned: sim batch sizes != spmd valid rows"
+        df = plane.sim_data_fn(pi, phase)
+        sim_draws = {}
+        for t in range(phase.n_steps):
+            for (w, _, _), spec in reversed(list(zip(rows, specs))):
+                sim_draws[(w, t)] = np.asarray(
+                    df(None, w, spec.batch_size)["tokens"])
+        for t in range(phase.n_steps):
+            gb = plane(phase, plane._starts[pi] + t)
+            ofs = 0
+            for w, valid, rcount in rows:
+                canon = data.batch_at(
+                    plane.worker_indices(pi, w, t, valid),
+                    phase.input_size)["tokens"]
+                assert np.array_equal(sim_draws[(w, t)], canon), \
+                    f"sim stream diverges at phase {pi} worker {w} step {t}"
+                assert np.array_equal(gb["tokens"][ofs:ofs + valid], canon), \
+                    f"spmd rows diverge at phase {pi} worker {w} step {t}"
+                ofs += rcount
+                checked += 1
+
+    # (b) machinery neutrality: plane feed (prefetch + overlap compile)
+    # vs the legacy inline-staged loop on the same stream -> bit-identical
+    def run_spmd(batch_fn, overlap):
+        engine = TrainEngine(cfg, sgd_momentum(0.0), sgd_server=True,
+                             scan_chunk=2, overlap_compile=overlap)
+        p0 = jax.tree_util.tree_map(jnp.copy, params)
+        return SpmdBackend(engine, batch_fn).run(phases, p0, seed=seed)
+
+    res_new = run_spmd(DataPlane(data, seed=seed), True)
+    legacy_plane = DataPlane(data, seed=seed).bind(phases)
+    res_old = run_spmd(lambda ph, g: legacy_plane(ph, g), False)
+    assert [h["loss"] for h in res_new.history] \
+        == [h["loss"] for h in res_old.history], \
+        "plane-fed scan feed changed the training history"
+    assert all(np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(jax.tree_util.tree_leaves(res_new.params),
+                               jax.tree_util.tree_leaves(res_old.params))), \
+        "plane-fed scan feed changed the final params"
+
+    # (c) the same plane drives the event-driven simulator end-to-end
+    def fns_factory(input_size):
+        def grad_fn(p, b):
+            return jax.grad(lambda pp: models.loss_fn(pp, cfg, b)[0])(p)
+        return grad_fn, None, None          # data comes from the plane
+
+    sim = PsSimBackend(fns_factory, tm=tm, sync=BSP(), momentum=0.0,
+                       plane=DataPlane(data, seed=seed))
+    res_sim = sim.run(phases, jax.tree_util.tree_map(jnp.copy, params),
+                      seed=seed)
+    assert len(res_sim.phases) == len(phases)
+    assert all(np.all(np.isfinite(np.asarray(l)))
+               for l in jax.tree_util.tree_leaves(res_sim.params))
+    return {"streams_checked": checked,
+            "history_len": len(res_new.history),
+            "sim_pushes": sum(r["steps"] for r in res_sim.phases)}
+
+
 def check_parity(*, seed: int = 0) -> dict:
     """Run all checks; raises AssertionError on any mismatch."""
     return {"merge": check_merge_parity(seed=seed),
             "fused": check_fused_parity(seed=seed),
-            "backend": check_backend_parity(seed=seed)}
+            "backend": check_backend_parity(seed=seed),
+            "data_plane": check_data_plane_parity(seed=seed)}
 
 
 if __name__ == "__main__":

@@ -80,10 +80,14 @@ def phases_from_hybrid(hybrid_phases: Sequence[HybridPhase], *,
     for i, hp in enumerate(hybrid_phases):
         n = bounds[i + 1] - bounds[i]
         size = hp.sub.input_size
+        # exact float cost ratio — integer division (ref // size) silently
+        # truncated non-divisible seq ladders (e.g. 384/256 -> 1 instead of
+        # 1.5), starving the small-seq sub-stages of their adapted batch
         ratio = ((ref / size) ** 2 if axis == "resolution"
-                 else ref // size if size else 1)
-        bsz = max(hp.dbl.n_workers, int(global_batch * ratio))
-        bsz -= bsz % hp.dbl.n_workers        # worker-divisible global batch
+                 else ref / size if size else 1.0)
+        nw = hp.dbl.n_workers
+        bsz = int(round(global_batch * ratio))
+        bsz = max(nw, nw * round(bsz / nw))  # worker-divisible global batch
         layout = (layout_from_plan(hp.dbl, bsz) if hp.dbl.n_small else None)
         out.append(Phase(input_size=size, n_steps=max(0, n), lr=hp.sub.lr,
                          batch_size=bsz, dropout=hp.sub.dropout,

@@ -10,6 +10,11 @@ With ``--optimizer sgd`` the dual-batch parameter update takes the fused
 Pallas ``dbl_merge`` server-update hot path (paper §3.4); pass
 ``--no-fused-merge`` to fall back to the unfused scale/add/apply sequence.
 
+Batches come from the resolution-aware ``repro.data.DataPlane`` (one input
+pipeline for both backends): per-(phase, worker, step) counter streams,
+double-buffered scan staging (``--no-prefetch`` to disable) and overlapped
+next-phase warm compile (``--no-overlap-compile``).
+
 Works on any arch config at reduced scale on CPU (examples/ wire it to a
 ~100M-class model) and on the production mesh unchanged.
 
@@ -23,14 +28,11 @@ import argparse
 import json
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro import models
-from repro.cluster import phase_seed
 from repro.configs import ARCH_IDS, get_config, reduced
 from repro.core import LinearTimeModel, hybrid_schedule, solve_plan
-from repro.data import SyntheticTokens
+from repro.data import DataPlane, SyntheticTokens
 from repro.engine import (SpmdBackend, TrainEngine, phases_from_hybrid,
                           single_phase)
 from repro.optim import make_optimizer
@@ -91,6 +93,14 @@ def run(argv=None):
     ap.add_argument("--server-momentum", type=float, default=0.0,
                     help="PS-server momentum folded into the fused kernel "
                          "pass (dual-batch SGD scan path)")
+    ap.add_argument("--no-overlap-compile", dest="overlap",
+                    action="store_false", default=True,
+                    help="compile each phase cold at its boundary instead "
+                         "of AOT-compiling the next phase in the background")
+    ap.add_argument("--no-prefetch", dest="prefetch", action="store_false",
+                    default=True,
+                    help="stage scan chunks synchronously instead of "
+                         "double-buffering them on a background thread")
     ap.add_argument("--ckpt", default="",
                     help="checkpoint dir; saves at every phase boundary")
     ap.add_argument("--resume", action="store_true",
@@ -104,7 +114,8 @@ def run(argv=None):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
-    data = SyntheticTokens(vocab=min(cfg.vocab_size, 256), seed=args.seed)
+    data = SyntheticTokens(vocab=min(cfg.vocab_size, 256), seed=args.seed,
+                           n_examples=max(4096, args.global_batch * 64))
     params = models.init_params(cfg, jax.random.PRNGKey(args.seed))
 
     phases = build_phases(args)
@@ -136,21 +147,19 @@ def run(argv=None):
                          fused_merge=("auto" if args.fused else False),
                          scan_loop=("auto" if args.scan else False),
                          server_momentum=(args.server_momentum
-                                          if sgd_server else 0.0))
+                                          if sgd_server else 0.0),
+                         overlap_compile=args.overlap)
 
-    def batch_fn(phase, gstep):
-        # stateless in gstep so a phase-boundary resume replays the
-        # uninterrupted run's batch stream exactly (same mixer as the
-        # backends' per-phase streams)
-        rng = np.random.RandomState(phase_seed(args.seed, gstep))
-        b = data.batch(rng, phase.batch_size, phase.input_size)
-        return {"tokens": jnp.asarray(b["tokens"] % cfg.vocab_size),
-                "labels": jnp.asarray(b["labels"] % cfg.vocab_size)}
+    # the DataPlane is the batch_fn: counter-keyed per-(phase, worker,
+    # step) streams (stateless in gstep, so a phase-boundary resume
+    # replays the uninterrupted run's stream exactly), host-side seq-len
+    # cropping, double-buffered scan staging and warm-compile structs
+    plane = DataPlane(data, seed=args.seed, prefetch=args.prefetch)
 
     def log_fn(rec):
         print(json.dumps(_to_cli_rec(rec)))
 
-    backend = SpmdBackend(engine, batch_fn)
+    backend = SpmdBackend(engine, plane)
     res = backend.run(phases, params, opt_state=opt_state, seed=args.seed,
                       ckpt_dir=args.ckpt or None, resume=args.resume,
                       log_fn=log_fn)

@@ -1,0 +1,163 @@
+"""DataPlane: canonical stream determinism, resolution correctness at
+every sub_sizes rung, double-buffered staging equivalence, and the
+engine's overlapped next-phase warm compile."""
+import numpy as np
+
+from repro.core import LinearTimeModel, solve_plan
+from repro.data import (DataPlane, SyntheticImages, SyntheticTokens,
+                        bilinear_resize, crop_tokens, resize_images,
+                        stream_indices)
+from repro.engine import single_phase
+
+TM = LinearTimeModel(a=1.0, b=24.6)
+
+
+def _phases(n_steps=3, sizes=(16, 32), batch=8):
+    plan = solve_plan(TM, B_L=batch, d=256, n_workers=4, n_small=2, k=1.05)
+    out = ()
+    for s in sizes:
+        out += single_phase(input_size=s, n_steps=n_steps, lr=0.01,
+                            batch_size=batch, plan=plan)
+    return out
+
+
+# ------------------------- canonical streams -------------------------------
+def test_stream_indices_stateless_and_keyed():
+    a = stream_indices(100, 8, seed=1, phase=0, wid=2, step=3)
+    b = stream_indices(100, 8, seed=1, phase=0, wid=2, step=3)
+    np.testing.assert_array_equal(a, b)          # stateless
+    for kw in ({"seed": 2}, {"phase": 1}, {"wid": 3}, {"step": 4}):
+        c = stream_indices(100, 8, **{**dict(seed=1, phase=0, wid=2, step=3),
+                                      **kw})
+        assert not np.array_equal(a, c), f"stream ignores {kw}"
+
+
+def test_plane_batches_independent_of_draw_order():
+    data = SyntheticTokens(vocab=32, seed=0, n_examples=128)
+    phases = _phases()
+    p1 = DataPlane(data, seed=5).bind(phases)
+    p2 = DataPlane(data, seed=5).bind(phases)
+    # p1 drawn forward, p2 drawn in reversed step order -> same batches
+    fwd = [p1(phases[0], t) for t in range(3)]
+    rev = [p2(phases[0], t) for t in (2, 1, 0)][::-1]
+    for a, b in zip(fwd, rev):
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_plane_worker_rows_pad_small_group():
+    data = SyntheticTokens(vocab=32, seed=0, n_examples=128)
+    phases = _phases(sizes=(16,))
+    plane = DataPlane(data, seed=0).bind(phases)
+    layout = phases[0].layout
+    rows = plane.worker_rows(phases[0])
+    assert len(rows) == layout.n_workers
+    assert sum(r for _, _, r in rows) == phases[0].batch_size
+    gb = plane.global_indices(phases[0], 0)
+    ofs = 0
+    for w, valid, rcount in rows:
+        blk = gb[ofs:ofs + rcount]
+        np.testing.assert_array_equal(
+            blk[:valid], plane.worker_indices(0, w, 0, valid))
+        # padding rows repeat the last valid sample (weight-0 rows)
+        assert all(blk[valid:] == blk[valid - 1])
+        ofs += rcount
+
+
+def test_sim_data_fn_matches_spmd_rows():
+    data = SyntheticTokens(vocab=32, seed=0, n_examples=128)
+    phases = _phases(sizes=(16, 32))
+    plane = DataPlane(data, seed=3).bind(phases)
+    for pi, phase in enumerate(phases):
+        df = plane.sim_data_fn(pi, phase)
+        rows = plane.worker_rows(phase)
+        for t in range(2):
+            gb = plane(phase, plane._starts[pi] + t)
+            ofs = 0
+            for w, valid, rcount in rows:
+                sim = np.asarray(df(None, w, valid)["tokens"])
+                np.testing.assert_array_equal(sim,
+                                              gb["tokens"][ofs:ofs + valid])
+                ofs += rcount
+
+
+# ---------------------- resolution correctness -----------------------------
+def test_resize_every_sub_size_rung():
+    """Host-side resize is exact at the base rung, shape-correct and
+    constant-preserving at every lower rung of a CPL ladder."""
+    data = SyntheticImages(n_train=32, n_test=8, base_res=32, seed=0)
+    plane = DataPlane(data, seed=0)
+    idx = np.arange(8)
+    for r in (16, 24, 32):                      # sub_sizes ladder
+        b = data.batch_at(idx, r)
+        assert b["images"].shape == (8, r, r, 3)
+        assert b["images"].dtype == np.float32
+        st = plane.batch_struct(
+            single_phase(input_size=r, n_steps=1, lr=0.1, batch_size=8)[0])
+        assert tuple(st["images"].shape) == (8, r, r, 3)
+    # base rung is the identity (no resample)
+    full = data.batch_at(idx, 32)["images"]
+    direct = data.templates[data.train_labels[idx]] \
+        + data.noise * data.train_noise[idx]
+    np.testing.assert_array_equal(full, direct.astype(np.float32))
+    # bilinear of a constant field is constant at any rung
+    const = np.full((32, 32, 3), 0.7, np.float32)
+    for r in (16, 24, 32):
+        np.testing.assert_allclose(bilinear_resize(const, r), 0.7,
+                                   rtol=1e-6)
+    # resize_images short-circuits at the native size
+    assert resize_images(const[None], 32) is not None
+    np.testing.assert_array_equal(resize_images(const[None], 32)[0], const)
+
+
+def test_token_rungs_are_prefixes():
+    """Seq-len rungs crop to prefixes of the SAME walks — a cyclic seq
+    schedule trains on consistent streams across sub-stages."""
+    data = SyntheticTokens(vocab=32, seed=0, n_examples=64)
+    idx = np.arange(6)
+    short = data.batch_at(idx, 16)
+    long = data.batch_at(idx, 32)
+    np.testing.assert_array_equal(short["tokens"], long["tokens"][:, :16])
+    np.testing.assert_array_equal(short["labels"], long["labels"][:, :16])
+    with np.testing.assert_raises(ValueError):
+        crop_tokens(np.zeros((2, 8), np.int32), 16)
+
+
+# ---------------------- double-buffered staging ----------------------------
+def test_scan_feed_prefetch_matches_sync():
+    data = SyntheticTokens(vocab=32, seed=0, n_examples=128)
+    phases = _phases(n_steps=5, sizes=(16,))
+    a = DataPlane(data, seed=0, prefetch=True).bind(phases)
+    b = DataPlane(data, seed=0, prefetch=False).bind(phases)
+    fa = list(a.scan_feed(phases[0], 0, 5, 2))
+    fb = list(b.scan_feed(phases[0], 0, 5, 2))
+    assert [c for c, _ in fa] == [c for c, _ in fb] == [2, 2, 1]
+    for (_, x), (_, y) in zip(fa, fb):
+        for k in x:
+            np.testing.assert_array_equal(np.asarray(x[k]),
+                                          np.asarray(y[k]))
+
+
+# ---------------------- overlapped warm compile ----------------------------
+def test_engine_overlap_compile_warm_hits():
+    import jax
+    from repro import models
+    from repro.cluster import SpmdBackend
+    from repro.configs import get_config, reduced
+    from repro.engine import TrainEngine
+    from repro.optim import sgd_momentum
+
+    cfg = reduced(get_config("phi3-mini-3.8b"), layers=1, d_model=64,
+                  n_heads=2, vocab=64)
+    data = SyntheticTokens(vocab=cfg.vocab_size, seed=0, n_examples=128)
+    phases = _phases(n_steps=4, sizes=(16, 32))
+    engine = TrainEngine(cfg, sgd_momentum(0.0), sgd_server=True,
+                         scan_chunk=4)
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    res = SpmdBackend(engine, DataPlane(data, seed=0)).run(
+        phases, params, seed=0)
+    assert len(res.history) >= 2
+    # one stall record per phase, absolute indices under per-phase dispatch
+    assert [r["phase"] for r in engine.stall_log] == [0, 1]
+    assert engine.stall_log[0]["warm"] is False      # nothing before phase 0
+    assert engine.stall_log[1]["warm"] is True       # overlapped compile hit
+    assert engine.warm_scheduled >= 1 and engine.warm_errors == 0

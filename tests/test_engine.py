@@ -53,6 +53,24 @@ def test_single_phase_baseline_has_no_layout():
     assert p.layout is None and p.plan is None
 
 
+def test_phases_from_hybrid_nondivisible_seq_ratio():
+    """384/256 seq ladder: the ratio is 1.5, not 384//256 == 1 — the
+    small-seq sub-stage must get the exact adapted batch, rounded to a
+    worker-divisible count."""
+    hp = hybrid_schedule(TM, stages=(2,), stage_lrs=(0.01,),
+                         sub_sizes=(256, 384), sub_dropouts=(0.0, 0.0),
+                         B_L_ref=8, dataset_size=4096, n_workers=4,
+                         n_small=2, k=1.05, axis="seq_len")
+    phases = phases_from_hybrid(hp, total_steps=10, global_batch=8,
+                                axis="seq_len")
+    assert [p.input_size for p in phases] == [256, 384]
+    # 8 * (384/256) = 12 exactly (worker-divisible); the old integer
+    # truncation gave 8 * (384//256) = 8
+    assert phases[0].batch_size == 12
+    assert phases[1].batch_size == 8
+    assert all(p.batch_size % 4 == 0 for p in phases)
+
+
 # ------------------------- engine run + cache -------------------------------
 def test_engine_hybrid_run_caches_steps():
     cfg = tiny_cfg()
@@ -142,6 +160,10 @@ def test_ps_sim_spmd_parity():
     # SpmdBackend (weighted step, trivial layout) -> matching final params
     assert rec["backend"]["max_param_diff"] < 2e-5
     assert rec["backend"]["spmd_steps"] == 4
+    # one DataPlane feeds both backends identical per-worker streams, and
+    # the plane-fed scan feed is bit-identical to the legacy staging
+    assert rec["data_plane"]["streams_checked"] > 0
+    assert rec["data_plane"]["sim_pushes"] > 0
 
 
 # ------------------------------ micro mode ----------------------------------

@@ -28,6 +28,28 @@ def test_adapt_batch_resolution_and_seq():
     assert adapt_batch(256, 4096, 2048, axis="seq_len") == 512
 
 
+def test_adapt_batch_mem_fixed_frac():
+    """B(size) = B_ref·ratio / (f·ratio + 1−f): f is the size-independent
+    fraction of the per-sample footprint (measured at ref), not ignored."""
+    ratio = (32 / 24) ** 2
+    # f = 0 -> pure activation-proportional rule (back-compat default)
+    assert adapt_batch(560, 32, 24, mem_fixed_frac=0.0) == int(560 * ratio)
+    # f = 1 -> footprint independent of input size: batch pinned at B_ref
+    assert adapt_batch(560, 32, 24, mem_fixed_frac=1.0) == 560
+    # 0 < f < 1 damps the adaptation monotonically between those poles
+    prev = adapt_batch(560, 32, 24, mem_fixed_frac=0.0)
+    for f in (0.1, 0.3, 0.6, 0.9):
+        cur = adapt_batch(560, 32, 24, mem_fixed_frac=f)
+        assert 560 <= cur <= prev
+        assert cur == int(560 * ratio / (f * ratio + (1 - f)))
+        prev = cur
+    # the reference size is a fixed point for every f
+    for f in (0.0, 0.4, 1.0):
+        assert adapt_batch(560, 32, 32, mem_fixed_frac=f) == 560
+    with pytest.raises(ValueError):
+        adapt_batch(560, 32, 24, mem_fixed_frac=1.5)
+
+
 def test_cost_reduction_matches_paper_ratio():
     """Paper §5.2.3: size ratio 0.56 on CIFAR (24^2/32^2) drives the
     hybrid time saving; CPL cost < constant-resolution cost."""
