@@ -30,7 +30,11 @@ baseline moved):
   * ``engine/phase_transition_warm_us <= engine/phase_transition_cold_us *
     (1 + --step-tol)`` — the overlapped next-phase warm compile must not
     stall a cyclic resolution boundary longer than the cold recompile it
-    replaces (same shared-runner noise tolerance as the step gate).
+    replaces (same shared-runner noise tolerance as the step gate);
+  * ``ps_sim/trace_warm_us <= ps_sim/warm_call_us`` and
+    ``<= ps_sim/sweep_warm_us * (1 + --step-tol)`` — the trace-compiled
+    PS simulator must not lose to the per-event dispatch loop, neither
+    against the gated table-workload row nor on its own sweep workload.
 Run them alone (hard CI step) with ``--directional-only``; the baseline
 comparison above stays informative on shared runners.
 """
@@ -90,6 +94,34 @@ def check_directional(rows: dict, *, step_tol: float = 0.10) -> list:
         print(f"  directional ok: engine/phase_transition_warm_us="
               f"{w_us:.1f} <= cold_us={c_us:.1f} "
               f"(+{step_tol * 100:.0f}% tol)")
+    t_us = rows.get("ps_sim/trace_warm_us")
+    wc_us = rows.get("ps_sim/warm_call_us")
+    sw_us = rows.get("ps_sim/sweep_warm_us")
+    if t_us is None or wc_us is None:
+        print("  directional: ps_sim/{trace_warm,warm_call}_us missing "
+              "(not run)")
+    elif t_us > wc_us:
+        failures.append(
+            f"ps_sim/trace_warm_us={t_us:.1f} > warm_call_us={wc_us:.1f} "
+            "— the trace-compiled simulator lost to the per-event "
+            "dispatch loop")
+    else:
+        print(f"  directional ok: ps_sim/trace_warm_us={t_us:.1f} <= "
+              f"warm_call_us={wc_us:.1f}")
+    if t_us is not None and sw_us is not None:
+        # same-workload gate: the trace replay of the sweep sim must not
+        # lose to the event loop running the identical sim (same noise
+        # tolerance as the step gates)
+        if t_us > sw_us * (1.0 + step_tol):
+            failures.append(
+                f"ps_sim/trace_warm_us={t_us:.1f} > "
+                f"sweep_warm_us={sw_us:.1f} * {1 + step_tol:.2f} — the "
+                "trace-compiled path lost to the event loop on the same "
+                "sweep workload")
+        else:
+            print(f"  directional ok: ps_sim/trace_warm_us={t_us:.1f} <= "
+                  f"sweep_warm_us={sw_us:.1f} "
+                  f"(+{step_tol * 100:.0f}% tol)")
     return failures
 
 

@@ -78,10 +78,16 @@ def make_fns(cfg, data, resolution: int):
 def run_dbl(*, n_small: int, k: float = 1.05, factor: str = "ds_over_dl",
             epochs: int = 8, resolution: int = 32, lr: float = 0.05,
             seed: int = 0, params=None, tm: LinearTimeModel = TM,
-            sync="asp", jitter=0.0):
+            sync="asp", jitter=0.0, traced: bool = False,
+            trace_chunk: int = 8):
     """One dual-batch-learning run on the PS-sim backend; returns
     (final eval, sim_time, params, plan).  ``sync`` takes a SyncPolicy
-    object (or the legacy string)."""
+    object (or the legacy string).  ``traced=True`` runs each phase
+    through the trace-compiled simulator (same timeline/samples/epoch
+    structure; bit-identical for matmul models, float-epsilon conv
+    reassociation on CPU) — worth flipping for wide sweeps on small
+    models/accelerators; the conv workload here is compute-bound on CPU,
+    so the default stays on the event path."""
     cfg, data, p0 = build_problem(seed)
     if params is not None:
         p0 = params
@@ -96,7 +102,8 @@ def run_dbl(*, n_small: int, k: float = 1.05, factor: str = "ds_over_dl",
     from repro.data import DataPlane
     backend = PsSimBackend(lambda r: make_fns(cfg, data, r), tm=tm,
                            axis="resolution", sync=sync, jitter=jitter,
-                           plane=DataPlane(data, seed=seed))
+                           plane=DataPlane(data, seed=seed),
+                           traced=traced, trace_chunk=trace_chunk)
     res = backend.run(phases, p0, seed=seed)
     return res.last, res.time, res.params, plan
 

@@ -2,19 +2,30 @@
 
 Claims validated qualitatively at CPU scale: (a) any n_S > 0 beats the
 all-large baseline; (b) n_S must be large enough (small-batch data share)
-for the best accuracy."""
+for the best accuracy.
+
+``TABLE5_TRACED=1`` (or the ``traced`` kwarg) runs every sweep point
+through the trace-compiled simulator — the same event timeline replayed
+as compiled chunks, which is the path that makes this sweep tractable at
+real cluster sizes on accelerators (the CPU conv workload is
+gradient-bound, so the default stays on the event loop)."""
 from __future__ import annotations
+
+import os
 
 from benchmarks.common import run_dbl
 
 
-def run(quick: bool = True):
+def run(quick: bool = True, traced: bool | None = None):
+    if traced is None:
+        traced = os.environ.get("TABLE5_TRACED", "") == "1"
     epochs = 6 if quick else 16
     rows = []
     accs = {}
     for n_small in range(0, 5):
         last, sim_t, _, plan = run_dbl(n_small=n_small, k=1.05,
-                                       epochs=epochs, seed=0)
+                                       epochs=epochs, seed=0,
+                                       traced=traced)
         accs[n_small] = last["test_acc"]
         share = plan.small_data_fraction
         rows.append((f"table5/nS{n_small}", sim_t * 1e6,

@@ -4,6 +4,9 @@ the SPMD engine.
     sync       — pluggable BSP/ASP/SSP ``SyncPolicy`` objects
     topology   — per-worker time models, straggler jitter, elastic events
     simulator  — the event-driven PS loop (cached compiled updates)
+    trace      — the trace-compiled form: host-side schedule pass emitting
+                 a ``SimTrace``, replayed as fused device chunks
+                 (``simulate_traced`` — bit-identical, dispatch-free)
     backend    — ``Backend`` protocol; ``PsSimBackend`` / ``SpmdBackend``
                  run the same ``Phase`` schedule with unified history and
                  phase-boundary checkpoint/resume
@@ -12,15 +15,21 @@ from repro.cluster.backend import (Backend, PsSimBackend, RunResult,
                                    SpmdBackend, phase_record, phase_seed,
                                    scaled_time_model)
 from repro.cluster.simulator import (SimResult, local_update_cache_size,
-                                     local_update_for, simulate)
+                                     local_update_for, run_event_loop,
+                                     simulate)
 from repro.cluster.sync import ASP, BSP, SSP, SyncPolicy, as_policy
 from repro.cluster.topology import (ClusterEvent, WorkerSpec,
                                     workers_from_plan)
+from repro.cluster.trace import (SimTrace, execute_trace, schedule_pass,
+                                 simulate_traced, trace_scan_cache_size)
 
 __all__ = [
     "SyncPolicy", "BSP", "ASP", "SSP", "as_policy",
     "WorkerSpec", "ClusterEvent", "workers_from_plan",
     "SimResult", "simulate", "local_update_for", "local_update_cache_size",
+    "run_event_loop",
+    "SimTrace", "schedule_pass", "execute_trace", "simulate_traced",
+    "trace_scan_cache_size",
     "Backend", "RunResult", "PsSimBackend", "SpmdBackend",
     "phase_record", "phase_seed", "scaled_time_model",
 ]

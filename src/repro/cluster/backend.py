@@ -44,6 +44,7 @@ import numpy as np
 
 from repro.checkpoint.ckpt import restore_latest, save_checkpoint
 from repro.cluster.simulator import simulate
+from repro.cluster.trace import simulate_traced
 from repro.cluster.sync import SyncPolicy, as_policy
 from repro.cluster.topology import ClusterEvent, workers_from_plan
 from repro.core.flat import FlatParams
@@ -134,6 +135,15 @@ class PsSimBackend:
     the same plane fed to an ``SpmdBackend`` draws from identical
     per-worker streams — sample-for-sample equal in the canonical
     B_L-wide-row geometry (``repro.engine.parity.check_data_plane_parity``).
+    traced: run each phase through the trace-compiled simulator
+    (``repro.cluster.trace.simulate_traced``: host-side schedule pass +
+    fused device chunks) instead of the per-event dispatch loop — same
+    timeline/samples/epoch structure, bit-identical for matmul models
+    (``engine.parity.check_trace_parity``; see ``repro.cluster.trace``
+    for the conv-on-CPU scope note), a fraction of the host overhead;
+    ``trace_chunk`` bounds events per compiled chunk and ``trace_update``
+    picks the fused update form (``"auto"``: Pallas kernel on TPU, XLA
+    elementwise elsewhere).
     """
     name = "ps_sim"
 
@@ -143,7 +153,8 @@ class PsSimBackend:
                  jitter=0.0,
                  events_for_phase: Optional[
                      Callable[[int, Any], Sequence[ClusterEvent]]] = None,
-                 plane=None):
+                 plane=None, traced: bool = False, trace_chunk: int = 32,
+                 trace_update: str = "auto"):
         self._factory = fns_factory
         self._fns_cache: dict = {}
         self.tm = tm
@@ -154,6 +165,9 @@ class PsSimBackend:
         self.jitter = jitter
         self.events_for_phase = events_for_phase
         self.plane = plane
+        self.traced = bool(traced)
+        self.trace_chunk = int(trace_chunk)
+        self.trace_update = trace_update
 
     def _fns(self, input_size: int):
         if input_size not in self._fns_cache:
@@ -193,19 +207,32 @@ class PsSimBackend:
             workers = workers_from_plan(phase.plan, tm_sub,
                                         jitter=self.jitter)
             grad_fn, data_fn, eval_fn = self._fns(phase.input_size)
+            feed = None
             if self.plane is not None:
-                data_fn = self.plane.sim_data_fn(i, phase)
+                if self.traced:
+                    # trace staging draws the SAME counter-keyed streams
+                    # directly (trace.stream_step), no per-event closure
+                    feed = self.plane.trace_feed(i, phase)
+                    data_fn = None
+                else:
+                    data_fn = self.plane.sim_data_fn(i, phase)
             elif data_fn is None:
                 raise ValueError("fns_factory returned data_fn=None; pass "
                                  "plane=DataPlane(...) to supply batches")
             lr_fn = phase.lr_for_epoch or (lambda e, lr=phase.lr: lr)
             events = (self.events_for_phase(i, phase)
                       if self.events_for_phase else ())
-            res = simulate(params, grad_fn, data_fn, workers,
-                           epochs=max(1, phase.epochs), lr_for_epoch=lr_fn,
-                           sync=self.sync, momentum=self.momentum,
-                           eval_fn=eval_fn, seed=phase_seed(seed, i),
-                           events=events)
+            kw = dict(epochs=max(1, phase.epochs), lr_for_epoch=lr_fn,
+                      sync=self.sync, momentum=self.momentum,
+                      eval_fn=eval_fn, seed=phase_seed(seed, i),
+                      events=events)
+            if self.traced:
+                res = simulate_traced(params, grad_fn, data_fn, workers,
+                                      feed=feed,
+                                      scan_chunk=self.trace_chunk,
+                                      update=self.trace_update, **kw)
+            else:
+                res = simulate(params, grad_fn, data_fn, workers, **kw)
             params = res.params
             for rec in res.history:
                 history.append({**rec, "phase": i,

@@ -16,10 +16,21 @@ Cluster realism knobs (all deterministic under a fixed seed):
   * ``ClusterEvent``s — elastic join/leave mid-run; departed workers stop
     gating sync and epoch evaluation.
 
-The jitted server push and local update are cached at module scope (keyed
-on ``grad_fn`` identity, weakly), so repeated ``simulate()`` calls — e.g.
-one per phase in a schedule — reuse the compiled update instead of
-re-tracing it every invocation.
+The timeline itself — event order, per-event lr / update factor / batch
+size, sync gating, jitter draws, elastic membership and epoch-eval
+boundaries — is **gradient-independent**: a pure function of the time
+models, policy and seed.  ``run_event_loop`` is that pure driver, with the
+device work injected through ``execute`` / ``evaluate`` hooks; ``simulate``
+plugs in real JAX updates (the legacy event path, one fused dispatch per
+event), and ``repro.cluster.trace.schedule_pass`` plugs in recorders to
+emit a dense ``SimTrace`` that the trace-compiled executor replays as a
+handful of ``lax.scan`` calls.
+
+The jitted local update (pull → train → momentum → factor-scaled server
+push, ONE device dispatch per event) is cached at module scope keyed on
+``grad_fn`` identity (weakly), so repeated ``simulate()`` calls — e.g. one
+per phase in a schedule — reuse the compiled update instead of re-tracing
+it every invocation.
 
 This is what validates the paper's accuracy claims (Tables 3/5/8) on CPU;
 the deployable TPU form lives in core/spmd_dual_batch.py, and both run the
@@ -50,11 +61,6 @@ class SimResult:
 
 
 # --- compiled updates, cached across simulate() calls ----------------------
-@jax.jit
-def _apply_push(gp, delta, factor):
-    return jax.tree_util.tree_map(lambda w, d: w + factor * d, gp, delta)
-
-
 _LOCAL_UPDATES: "weakref.WeakKeyDictionary[Callable, Callable]" = \
     weakref.WeakKeyDictionary()
 
@@ -65,17 +71,30 @@ def _build_local_update(grad_fn: Callable, weak: bool = True) -> Callable:
     # distinct grad_fn identity would leak its closure + executable
     ref = weakref.ref(grad_fn) if weak else (lambda: grad_fn)
 
-    def local_update(params, vel, batch, lr, momentum):
-        grads = ref()(params, batch)
+    def local_update(params, vel, batch, lr, momentum, factor):
+        # pull -> train -> momentum -> factor-scaled server push, fused in
+        # ONE executable: the event loop pays one dispatch per event, not a
+        # local_update + apply_push pair.
+        #
+        # The barrier keeps XLA from folding the update math into the
+        # backward pass (e.g. a conv-epilogue -lr scale): the
+        # trace-compiled executor (repro.cluster.trace) runs the SAME
+        # straight-line backward followed by an opaque Pallas update
+        # kernel, so gradients must materialize at the same point here for
+        # the two paths to stay bit-identical
+        # (engine.parity.check_trace_parity).
+        grads = jax.lax.optimization_barrier(ref()(params, batch))
         vel = jax.tree_util.tree_map(
             lambda v, g: momentum * v + g, vel, grads)
         delta = jax.tree_util.tree_map(lambda v: -lr * v, vel)
-        return delta, vel
+        new = jax.tree_util.tree_map(lambda w, d: w + factor * d,
+                                     params, delta)
+        return new, vel
     return jax.jit(local_update)
 
 
 def local_update_for(grad_fn: Callable) -> Callable:
-    """Jitted pull→train→delta update for ``grad_fn``, cached weakly so a
+    """Jitted pull→train→push update for ``grad_fn``, cached weakly so a
     schedule revisiting the same grad_fn (every phase, every ``simulate()``
     call) pays tracing once instead of per invocation.
 
@@ -95,8 +114,8 @@ def local_update_for(grad_fn: Callable) -> Callable:
         except TypeError:                 # unweakrefable grad_fn
             return _build_local_update(grad_fn, weak=False)
 
-    def caller(params, vel, batch, lr, momentum):
-        return inner(params, vel, batch, lr, momentum)
+    def caller(params, vel, batch, lr, momentum, factor):
+        return inner(params, vel, batch, lr, momentum, factor)
     caller.__wrapped__ = inner
     caller._keepalive = grad_fn
     return caller
@@ -106,38 +125,34 @@ def local_update_cache_size() -> int:
     return len(_LOCAL_UPDATES)
 
 
-def simulate(init_params, grad_fn: Callable, data_fn: Callable,
-             workers: Sequence[WorkerSpec], *, epochs: int,
-             lr_for_epoch: Callable[[int], float],
-             sync: Union[str, SyncPolicy] = "asp",
-             staleness: int = 3, momentum: float = 0.9,
-             eval_fn: Optional[Callable] = None, seed: int = 0,
-             events: Sequence[ClusterEvent] = ()) -> SimResult:
-    """Run the PS simulation.
+def run_event_loop(workers: Sequence[WorkerSpec], *, epochs: int,
+                   lr_for_epoch: Callable[[int], float],
+                   policy: SyncPolicy, seed: int = 0,
+                   events: Sequence[ClusterEvent] = (),
+                   execute: Callable[[int, WorkerSpec, float], None],
+                   evaluate: Callable[[int, float], None],
+                   on_join: Optional[Callable[[int, WorkerSpec], None]]
+                   = None) -> tuple:
+    """Drive the gradient-independent PS timeline.
 
-    grad_fn(params, batch) -> grads (same pytree as params)
-    data_fn(rng, worker_id, batch_size) -> batch, where ``rng`` is a seeded
-      ``numpy.random.Generator`` shared across the run (draw batch indices
-      host-side from it — e.g. ``rng.integers(0, n, size=batch_size)``).
-      Batch selection used to burn one ``jax.random.split`` dispatch plus a
-      device sync per event; the host-side stream keeps the event loop off
-      the device entirely between compiled updates, and stays deterministic
-      under a fixed seed (draws happen in event-execution order).
-    eval_fn(params) -> dict of metrics, called at each epoch boundary
-      (epoch = when the *slowest* non-departed worker finishes its
-      allocation).
-    sync: a ``SyncPolicy`` (BSP()/ASP()/SSP(s)) or the legacy string
-      spelling; ``staleness`` only applies to the "ssp" string.
-    events: elastic ``ClusterEvent`` join/leave timeline.
+    Pops worker-completion events off a heap under the sync policy's
+    staleness gate, applies elastic membership changes, draws straggler
+    jitter and fires epoch evaluations — everything the simulated cluster
+    decides, with the actual training work abstracted behind hooks:
+
+      execute(wid, spec, lr)   one worker iteration in execution order
+                               (device update in ``simulate``; trace
+                               recording in the schedule pass)
+      evaluate(epoch, now)     an epoch boundary fired (the slowest
+                               non-departed worker finished epoch ``epoch``)
+      on_join(wid, spec)       a joiner entered (allocate per-worker state)
+
+    Returns ``(sim_time, n_pushes)``.  The hooks see the exact event order
+    the device path executes, so a trace recorded here replays it
+    faithfully by construction.
     """
-    policy = as_policy(sync, staleness)
-    local_update = local_update_for(grad_fn)
-
     specs: List[WorkerSpec] = list(workers)
     n0 = len(specs)
-    global_params = init_params
-    velocity = [jax.tree_util.tree_map(jnp.zeros_like, init_params)
-                for _ in range(n0)]
     total_iters = [epochs * w.iters_per_epoch for w in specs]
     done_iters = [0] * n0
     base_iters = [0] * n0    # joiners start at the cluster frontier
@@ -150,8 +165,6 @@ def simulate(init_params, grad_fn: Callable, data_fn: Callable,
         return np.random.RandomState((seed * 1000003 + 7919 * wid) % 2**32)
 
     jit_rngs = [_worker_rng(i) for i in range(n0)]
-    data_rng = np.random.Generator(np.random.PCG64(seed))
-    history: List[dict] = []
     sim_time = 0.0
     evaluated_epochs = 0
     n_pushes = 0
@@ -178,10 +191,7 @@ def simulate(init_params, grad_fn: Callable, data_fn: Callable,
             if not alive or min(alive) <= evaluated_epochs:
                 return
             evaluated_epochs += 1
-            rec = {"epoch": evaluated_epochs, "sim_time": now}
-            if eval_fn is not None:
-                rec.update(eval_fn(global_params))
-            history.append(rec)
+            evaluate(evaluated_epochs, now)
 
     def min_active_iters() -> int:
         """Finished and departed workers must not gate progress."""
@@ -213,7 +223,8 @@ def simulate(init_params, grad_fn: Callable, data_fn: Callable,
         # up — elastic capacity must not stall the existing members
         base = min_active_iters()
         specs.append(spec)
-        velocity.append(jax.tree_util.tree_map(jnp.zeros_like, init_params))
+        if on_join is not None:
+            on_join(wid, spec)
         base_iters.append(base)
         total_iters.append(base + epochs * spec.iters_per_epoch)
         done_iters.append(base)
@@ -260,14 +271,11 @@ def simulate(init_params, grad_fn: Callable, data_fn: Callable,
             # it will be re-queued when the slowest worker advances
             continue
 
-        # pull -> local train -> push (factor-scaled); epoch progress is
-        # measured from the worker's own base (joiners start mid-frontier)
+        # one worker iteration; epoch progress is measured from the
+        # worker's own base (joiners start mid-frontier)
         own_iters = done_iters[wid] - base_iters[wid]
         lr = lr_for_epoch(min(own_iters // w.iters_per_epoch, epochs - 1))
-        batch = data_fn(data_rng, wid, w.batch_size)
-        delta, velocity[wid] = local_update(global_params, velocity[wid],
-                                            batch, lr, momentum)
-        global_params = _apply_push(global_params, delta, w.update_factor)
+        execute(wid, w, lr)
         n_pushes += 1
 
         done_iters[wid] += 1
@@ -281,5 +289,62 @@ def simulate(init_params, grad_fn: Callable, data_fn: Callable,
         release_waiting(now)
 
     maybe_eval(sim_time)
+    return sim_time, n_pushes
+
+
+def simulate(init_params, grad_fn: Callable, data_fn: Callable,
+             workers: Sequence[WorkerSpec], *, epochs: int,
+             lr_for_epoch: Callable[[int], float],
+             sync: Union[str, SyncPolicy] = "asp",
+             staleness: int = 3, momentum: float = 0.9,
+             eval_fn: Optional[Callable] = None, seed: int = 0,
+             events: Sequence[ClusterEvent] = ()) -> SimResult:
+    """Run the PS simulation (legacy event path: one device dispatch per
+    event; see ``repro.cluster.trace.simulate_traced`` for the
+    trace-compiled form that replays the same timeline as fused scans).
+
+    grad_fn(params, batch) -> grads (same pytree as params)
+    data_fn(rng, worker_id, batch_size) -> batch, where ``rng`` is a seeded
+      ``numpy.random.Generator`` shared across the run (draw batch indices
+      host-side from it — e.g. ``rng.integers(0, n, size=batch_size)``).
+      Batch selection used to burn one ``jax.random.split`` dispatch plus a
+      device sync per event; the host-side stream keeps the event loop off
+      the device entirely between compiled updates, and stays deterministic
+      under a fixed seed (draws happen in event-execution order).
+    eval_fn(params) -> dict of metrics, called at each epoch boundary
+      (epoch = when the *slowest* non-departed worker finishes its
+      allocation).
+    sync: a ``SyncPolicy`` (BSP()/ASP()/SSP(s)) or the legacy string
+      spelling; ``staleness`` only applies to the "ssp" string.
+    events: elastic ``ClusterEvent`` join/leave timeline.
+    """
+    policy = as_policy(sync, staleness)
+    local_update = local_update_for(grad_fn)
+
+    state = {"params": init_params}
+    velocity = [jax.tree_util.tree_map(jnp.zeros_like, init_params)
+                for _ in workers]
+    data_rng = np.random.Generator(np.random.PCG64(seed))
+    history: List[dict] = []
+
+    def on_join(wid: int, spec: WorkerSpec):
+        velocity.append(jax.tree_util.tree_map(jnp.zeros_like, init_params))
+
+    def execute(wid: int, w: WorkerSpec, lr: float):
+        batch = data_fn(data_rng, wid, w.batch_size)
+        state["params"], velocity[wid] = local_update(
+            state["params"], velocity[wid], batch, lr, momentum,
+            w.update_factor)
+
+    def evaluate(epoch: int, now: float):
+        rec = {"epoch": epoch, "sim_time": now}
+        if eval_fn is not None:
+            rec.update(eval_fn(state["params"]))
+        history.append(rec)
+
+    sim_time, n_pushes = run_event_loop(
+        workers, epochs=epochs, lr_for_epoch=lr_for_epoch, policy=policy,
+        seed=seed, events=events, execute=execute, evaluate=evaluate,
+        on_join=on_join)
     return SimResult(sim_time=sim_time, history=history,
-                     params=global_params, n_pushes=n_pushes)
+                     params=state["params"], n_pushes=n_pushes)

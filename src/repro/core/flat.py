@@ -101,6 +101,25 @@ class FlatSpec:
                                         self.shapes, self.dtypes)]
         return jax.tree_util.tree_unflatten(self.treedef, leaves)
 
+    # -- stacked per-worker buffers (trace-compiled PS simulator) ------
+    # the trace executor carries every simulated worker's velocity in ONE
+    # (n_workers, rows, LANE) buffer so the per-event kernel can gather /
+    # scatter a worker's row block by index instead of hauling a list of
+    # pytrees through the scan carry
+    def zeros_stacked(self, n: int):
+        """Zero-initialized ``(n, rows, LANE)`` stacked buffer — one flat
+        row block per simulated worker (fresh workers, zero velocity)."""
+        return jnp.zeros((int(n),) + self.shape, jnp.float32)
+
+    def ravel_stacked(self, trees):
+        """Per-worker pytrees -> ``(len(trees), rows, LANE)`` stack."""
+        return jnp.stack([self.ravel(t) for t in trees])
+
+    def unravel_stacked(self, buf):
+        """``(n, rows, LANE)`` stack -> list of n pytrees (row block i is
+        worker i's state, original shapes/dtypes)."""
+        return [self.unravel(buf[i]) for i in range(buf.shape[0])]
+
     # -- compiled codec (phase-boundary entry points) ------------------
     # eagerly dispatching one op per leaf costs milliseconds on wide trees;
     # the jitted forms run the whole codec as one executable and are cached

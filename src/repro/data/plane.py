@@ -54,6 +54,31 @@ import numpy as np
 from repro.data.pipeline import stream_indices
 
 
+def prefetch_iter(stage, items, executor=None):
+    """Double-buffered staging: yield ``stage(*item)`` for each item, with
+    the NEXT item staged on ``executor`` (a single-worker pool — FIFO, so
+    stateful stages keep their call order) while the caller consumes the
+    current one.  ``executor=None`` stages synchronously.  The one shared
+    prefetch loop behind ``DataPlane.scan_feed`` / ``DataPlane.trace_feed``
+    / ``repro.cluster.trace.data_fn_feed``; cancels the in-flight future
+    if the consumer abandons the iterator early."""
+    items = list(items)
+    if executor is None or len(items) <= 1:
+        for it in items:
+            yield stage(*it)
+        return
+    fut = executor.submit(stage, *items[0])
+    try:
+        for i in range(len(items)):
+            staged = fut.result()
+            fut = (executor.submit(stage, *items[i + 1])
+                   if i + 1 < len(items) else None)
+            yield staged
+    finally:
+        if fut is not None:
+            fut.cancel()
+
+
 class DataPlane:
     """One input pipeline for every backend (see module docstring).
 
@@ -187,6 +212,41 @@ class DataPlane:
             return {k: jnp.asarray(v) for k, v in b.items()}
         return data_fn
 
+    # -- trace-compiled PS simulator feed ---------------------------------
+    def trace_feed(self, phase_idx: int, phase, *,
+                   prefetch: Optional[bool] = None):
+        """``feed(trace, ranges)`` for ``repro.cluster.trace``'s execute
+        pass: stages each event range of a ``SimTrace`` from the canonical
+        per-``(seed, phase, worker, step)`` streams — ``trace.stream_step``
+        holds exactly the per-worker counters the event path's
+        ``sim_data_fn`` closures would have advanced, so sample selection
+        is bit-identical to the event-driven run.  Each chunk is
+        host-stacked (padded to the largest event batch) and shipped as one
+        ``device_put``; with prefetch the next range stages on the
+        background thread while the compiled chunk executes."""
+        use_prefetch = self.prefetch if prefetch is None else bool(prefetch)
+
+        def feed(trace, ranges):
+            import jax
+            from repro.cluster.trace import stack_event_batches
+            b_max = int(max(trace.sizes)) if trace.sizes else 1
+
+            def stage(e0: int, e1: int):
+                batches = [
+                    self.source.batch_at(
+                        self.worker_indices(phase_idx,
+                                            int(trace.worker_id[e]),
+                                            int(trace.stream_step[e]),
+                                            int(trace.batch_size[e])),
+                        phase.input_size)
+                    for e in range(e0, e1)]
+                return jax.device_put(stack_event_batches(batches, b_max))
+
+            yield from prefetch_iter(
+                stage, ranges,
+                self._executor() if use_prefetch else None)
+        return feed
+
     # -- double-buffered scan feed ----------------------------------------
     def _executor(self) -> ThreadPoolExecutor:
         with self._pool_lock:
@@ -210,24 +270,14 @@ class DataPlane:
         from absolute step ``start``.  With ``prefetch`` the next chunk is
         staged on the background thread while the caller's compiled scan
         consumes the current one — the double buffer."""
-        sizes, rem = [], n_steps
+        items, g0, rem = [], start, n_steps
         while rem:
             c = min(rem, chunk)
-            sizes.append(c)
-            rem -= c
-        if not self.prefetch or len(sizes) <= 1:
-            g0 = start
-            for c in sizes:
-                yield c, self._stage_chunk(phase, g0, c)
-                g0 += c
-            return
-        ex = self._executor()
-        g0 = start
-        fut = ex.submit(self._stage_chunk, phase, g0, sizes[0])
-        for i, c in enumerate(sizes):
-            staged = fut.result()
-            if i + 1 < len(sizes):
-                fut = ex.submit(self._stage_chunk, phase, g0 + c,
-                                sizes[i + 1])
-            yield c, staged
+            items.append((phase, g0, c))
             g0 += c
+            rem -= c
+        staged_iter = prefetch_iter(self._stage_chunk, items,
+                                    self._executor() if self.prefetch
+                                    else None)
+        for (_, _, c), staged in zip(items, staged_iter):
+            yield c, staged

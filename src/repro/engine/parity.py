@@ -31,6 +31,12 @@ Three assertions on a tiny model:
    progressive schedule runs end-to-end through the plane on both
    backends.
 
+5. **Trace parity** — the trace-compiled simulator (host-side schedule
+   pass + fused device chunks, ``repro.cluster.trace``) is bit-identical
+   to the event-driven loop across BSP/ASP/SSP with jitter, mixed batch
+   sizes, elastic membership and per-epoch LR schedules, in both fused
+   update forms.
+
 Run directly:  PYTHONPATH=src python -m repro.engine.parity
 """
 from __future__ import annotations
@@ -280,12 +286,73 @@ def check_data_plane_parity(*, seed: int = 0) -> dict:
             "sim_pushes": sum(r["steps"] for r in res_sim.phases)}
 
 
+def check_trace_parity(*, seed: int = 0) -> dict:
+    """5. **Trace parity** — the trace-compiled simulator
+    (``repro.cluster.trace.simulate_traced``: host-side schedule pass +
+    fused device chunks) replays the event-driven ``simulate()``
+    BIT-IDENTICALLY: same final params, same per-epoch history (eval
+    metrics included), same ``n_pushes`` and ``sim_time`` — under all
+    three sync policies, with straggler jitter > 0, mixed worker batch
+    sizes (the executor's size-switch path), a real per-epoch LR schedule
+    and an elastic join+leave timeline, in both fused-update forms (the
+    Pallas worker kernel and its XLA elementwise twin)."""
+    from repro.cluster import (ASP, BSP, SSP, ClusterEvent, WorkerSpec,
+                               simulate)
+    from repro.cluster.trace import simulate_traced
+    cfg, params, _ = _tiny_setup(seed)
+    toks = np.random.RandomState(seed + 3).randint(
+        0, cfg.vocab_size, (128, 16))
+
+    def grad_fn(p, b):
+        return jax.grad(lambda pp: models.loss_fn(pp, cfg, b)[0])(p)
+
+    def data_fn(rng, wid, bsz):
+        idx = rng.integers(0, len(toks), size=bsz)
+        t = jnp.asarray(toks[idx])
+        return {"tokens": t, "labels": t}
+
+    def eval_fn(p):
+        batch = {"tokens": jnp.asarray(toks[:8]),
+                 "labels": jnp.asarray(toks[:8])}
+        return {"loss": float(models.loss_fn(p, cfg, batch)[0])}
+
+    workers = [WorkerSpec(8, 16, 1.0, 0.1, 0.2),     # B_L rows
+               WorkerSpec(4, 16, 0.8, 0.07, 0.2)]    # B_S rows (switch)
+    elastic = (ClusterEvent(time=0.25, action="join",
+                            worker=WorkerSpec(8, 16, 0.5, 0.1, 0.2)),
+               ClusterEvent(time=0.8, action="leave", worker_id=1))
+    checked = 0
+    for sync, events in ((BSP(), ()), (ASP(), elastic), (SSP(1), ())):
+        kw = dict(epochs=2,
+                  lr_for_epoch=lambda e: 0.05 if e < 1 else 0.01,
+                  sync=sync, momentum=0.9, seed=seed + 7, events=events,
+                  eval_fn=eval_fn)
+        ref = simulate(params, grad_fn, data_fn, workers, **kw)
+        for update in ("xla", "pallas"):
+            res = simulate_traced(params, grad_fn, data_fn, workers,
+                                  scan_chunk=8, update=update, **kw)
+            for a, b in zip(jax.tree_util.tree_leaves(ref.params),
+                            jax.tree_util.tree_leaves(res.params)):
+                assert np.array_equal(np.asarray(a), np.asarray(b)), (
+                    f"trace params diverge from the event path "
+                    f"(sync={sync.name}, update={update})")
+            assert res.history == ref.history, (
+                f"trace history diverges (sync={sync.name}, "
+                f"update={update})")
+            assert res.n_pushes == ref.n_pushes
+            assert res.sim_time == ref.sim_time
+            checked += 1
+    return {"configs_checked": checked,
+            "events_replayed": ref.n_pushes}
+
+
 def check_parity(*, seed: int = 0) -> dict:
     """Run all checks; raises AssertionError on any mismatch."""
     return {"merge": check_merge_parity(seed=seed),
             "fused": check_fused_parity(seed=seed),
             "backend": check_backend_parity(seed=seed),
-            "data_plane": check_data_plane_parity(seed=seed)}
+            "data_plane": check_data_plane_parity(seed=seed),
+            "trace": check_trace_parity(seed=seed)}
 
 
 if __name__ == "__main__":

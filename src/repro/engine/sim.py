@@ -24,19 +24,22 @@ def run_sim(phases: Sequence[Phase], init_params, fns_factory: Callable, *,
             sync="asp", momentum: float = 0.9, seed: int = 0,
             ref_size: Optional[int] = None, jitter=0.0,
             ckpt_dir: Optional[str] = None,
-            resume: bool = False, plane=None) -> RunResult:
+            resume: bool = False, plane=None,
+            traced: bool = False) -> RunResult:
     """Run a phase schedule on the PS-sim backend.
 
     fns_factory(input_size) -> (grad_fn, data_fn, eval_fn) at that size
     (memoized per size by the backend).  ``sync`` takes a ``SyncPolicy``
     or the legacy string spelling.  ``plane`` (a ``repro.data.DataPlane``)
     replaces the factory's data_fn with the canonical per-worker sample
-    streams shared with the SPMD backend.  Returns the backend
-    ``RunResult`` (``.params``, ``.time``, ``.history``, ``.phases``,
-    ``.last``).
+    streams shared with the SPMD backend.  ``traced=True`` runs each
+    phase through the trace-compiled simulator (bit-identical replay of
+    the event timeline as fused device chunks — see ``repro.cluster
+    .trace``).  Returns the backend ``RunResult`` (``.params``,
+    ``.time``, ``.history``, ``.phases``, ``.last``).
     """
     backend = PsSimBackend(fns_factory, tm=tm, axis=axis, sync=sync,
                            momentum=momentum, ref_size=ref_size,
-                           jitter=jitter, plane=plane)
+                           jitter=jitter, plane=plane, traced=traced)
     return backend.run(phases, init_params, seed=seed, ckpt_dir=ckpt_dir,
                        resume=resume)

@@ -25,6 +25,14 @@ flat-store tests assert stays at ONE per server update.
 
 ``dbl_merge_tree`` / ``dbl_merge_flat`` are the pytree / 1D front ends
 (both route through the same single-launch core).
+
+``dbl_apply_worker_flat2d`` is the trace-compiled PS simulator's per-event
+update: the velocity of every simulated worker lives in ONE stacked
+``(n_workers, rows, LANE)`` buffer, and the kernel gathers worker ``wid``'s
+velocity row block, applies momentum + the factor-scaled server push, and
+scatters the row back — local update and server push in a single launch,
+with ``lr`` / ``factor`` / ``momentum`` / ``wid`` as tiny traced operands
+so one executable serves every event of a ``lax.scan`` over the trace.
 """
 from __future__ import annotations
 
@@ -35,7 +43,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.flat import BLOCK_ROWS, LANE, MAX_WHOLE_ROWS, padded_rows
+from repro.core.flat import (BLOCK_ROWS, LANE, MAX_WHOLE_ROWS, SUBLANE,
+                             padded_rows)
 
 _LAUNCHES = 0
 
@@ -159,6 +168,90 @@ def dbl_apply_flat2d(p2, g2, *, lr: float, vel2=None, momentum: float = 0.0,
                    (jax.ShapeDtypeStruct(p2.shape, p2.dtype),
                     jax.ShapeDtypeStruct(vel2.shape, vel2.dtype)),
                    {0: 0, 2: 1}, interpret=interpret, block_rows=block_rows)
+
+
+def _kernel_apply_worker(wid_ref, lr_ref, fac_ref, mom_ref, p_ref, g_ref,
+                         v_ref, op_ref, ov_ref):
+    # one simulated-PS event: gather worker wid's velocity row block from
+    # the stacked buffer, fold the momentum update in, apply the
+    # factor-scaled server push, scatter the row back.  The float op order
+    # mirrors the legacy event path exactly (m·v + g, then −lr·v, then
+    # w + f·d) so the trace-compiled executor stays bit-identical to it.
+    w = wid_ref[0]
+    p = p_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    v = v_ref[pl.ds(w, 1)][0].astype(jnp.float32)
+    v = mom_ref[0] * v + g
+    d = -lr_ref[0] * v
+    op_ref[...] = (p + fac_ref[0] * d).astype(op_ref.dtype)
+    ov_ref[pl.ds(w, 1)] = v[None].astype(ov_ref.dtype)
+
+
+def _worker_block_rows(rows: int, n_workers: int, block_rows: int) -> int:
+    """Row-tile height for the gridded worker kernel: the velocity block
+    carries ALL workers' rows for the tile, so halve the tile until the
+    stacked block fits the same VMEM budget a (BLOCK_ROWS, LANE) pair does
+    AND divides the buffer's row count (power-of-two heights divide any
+    sublane-padded row count once small enough)."""
+    budget = 2 * BLOCK_ROWS          # in+out param-block rows equivalent
+    b = block_rows
+    while b > 1 and (b * n_workers > budget or rows % b):
+        b //= 2
+    return b
+
+
+def dbl_apply_worker_flat2d(p2, g2, vel3, wid, lr, factor,
+                            momentum, *, interpret: Optional[bool] = None,
+                            block_rows: int = BLOCK_ROWS):
+    """ONE fused per-event PS update over the whole flat store.
+
+    p2 / g2: ``(rows, LANE)`` param / merged-gradient buffers; vel3: the
+    stacked ``(n_workers, rows, LANE)`` per-worker velocity buffer.  wid /
+    lr / factor / momentum are traced scalars (or ``(1,)`` arrays) — the
+    trace executor feeds them per event from the ``SimTrace`` arrays, so a
+    single compiled ``lax.scan`` serves every event regardless of which
+    worker fired or what the epoch schedule set lr to:
+
+        v'[wid] = m·v[wid] + g;   d = −lr·v'[wid];   w' = w + f·d
+
+    Returns ``(params, velocity)``; both alias their inputs, and only
+    worker ``wid``'s velocity row block is rewritten.
+    """
+    global _LAUNCHES
+    _LAUNCHES += 1
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    as1 = lambda x, dt: jnp.reshape(jnp.asarray(x), (1,)).astype(dt)
+    scalars = (as1(wid, jnp.int32), as1(lr, jnp.float32),
+               as1(factor, jnp.float32), as1(momentum, jnp.float32))
+    out_shape = (jax.ShapeDtypeStruct(p2.shape, p2.dtype),
+                 jax.ShapeDtypeStruct(vel3.shape, vel3.dtype))
+    aliases = {4: 0, 6: 1}
+    rows = p2.shape[0]
+    n_workers = vel3.shape[0]
+    # whole-buffer only while the STACKED velocity block also fits the
+    # budget — rows alone says nothing once n_workers grows, and the
+    # worker-sweep regime is exactly where it does
+    if rows <= MAX_WHOLE_ROWS and n_workers * rows <= 2 * MAX_WHOLE_ROWS:
+        return pl.pallas_call(_kernel_apply_worker, out_shape=out_shape,
+                              interpret=interpret,
+                              input_output_aliases=aliases)(
+            *scalars, p2, g2, vel3)
+    block = _worker_block_rows(rows, n_workers, block_rows)
+    if rows % block:
+        raise ValueError(
+            f"flat buffer of {rows} rows cannot grid over worker block "
+            f"rows {block}; pad rows to a sublane multiple (the codec's "
+            "padded_rows() does this)")
+    sspec = pl.BlockSpec((1,), lambda i: (0,))
+    pspec = pl.BlockSpec((block, LANE), lambda i: (i, 0))
+    vspec = pl.BlockSpec((n_workers, block, LANE), lambda i: (0, i, 0))
+    return pl.pallas_call(
+        _kernel_apply_worker, grid=(rows // block,),
+        in_specs=[sspec] * 4 + [pspec, pspec, vspec],
+        out_specs=(pspec, vspec), out_shape=out_shape,
+        interpret=interpret, input_output_aliases=aliases)(
+        *scalars, p2, g2, vel3)
 
 
 def dbl_merge_flat(p, g_large, g_small, *, factor: float, lr: float,

@@ -2,13 +2,14 @@
 jitter, elastic membership, and the compiled-update cache."""
 import math
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.cluster import (ASP, BSP, SSP, ClusterEvent, WorkerSpec,
-                           as_policy, local_update_for, simulate,
-                           workers_from_plan)
+                           as_policy, local_update_for, schedule_pass,
+                           simulate, simulate_traced, workers_from_plan)
 from repro.core.dual_batch import solve_plan
 from repro.core.time_model import LinearTimeModel
 from tests.test_param_server import quad_problem
@@ -181,8 +182,24 @@ def test_local_update_survives_grad_fn_drop():
     p = {"x": jnp.zeros(4)}
     v = {"x": jnp.zeros(4)}
     for bsz in (2, 3):                  # second shape forces a re-trace
-        delta, v = upd(p, v, jnp.zeros(bsz, jnp.int32), 0.1, 0.0)
-    assert np.all(np.isfinite(np.asarray(delta["x"])))
+        p, v = upd(p, v, jnp.zeros(bsz, jnp.int32), 0.1, 0.0, 1.0)
+    assert np.all(np.isfinite(np.asarray(p["x"])))
+
+
+def test_local_update_folds_push_single_dispatch():
+    """The cached update applies the factor-scaled server push itself —
+    params come back already pushed (w + f·(−lr·(m·v + g))), one jitted
+    call per event instead of a local_update + apply_push pair."""
+    def grad_fn(p, b):
+        return {"x": jnp.ones_like(p["x"])}
+
+    upd = local_update_for(grad_fn)
+    p = {"x": jnp.zeros(4)}
+    v = {"x": jnp.full((4,), 2.0)}
+    new, vel = upd(p, v, None, 0.1, 0.5, 0.8)
+    # v' = 0.5*2 + 1 = 2;  d = -0.1*2 = -0.2;  w' = 0 + 0.8*(-0.2) = -0.16
+    assert np.allclose(np.asarray(vel["x"]), 2.0)
+    assert np.allclose(np.asarray(new["x"]), -0.16)
 
 
 def test_repeated_simulate_reuses_update():
@@ -229,6 +246,165 @@ def test_trailing_event_does_not_inflate_clock():
                    events=[ClusterEvent(time=1e6, action="leave",
                                         worker_id=0)])
     assert res.sim_time == base.sim_time
+
+
+# ------------------------ trace-compiled simulator --------------------------
+def _assert_sim_equal(a, b, ctx=""):
+    for x, y in zip(jax.tree_util.tree_leaves(a.params),
+                    jax.tree_util.tree_leaves(b.params)):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), \
+            f"params diverge {ctx}"
+    assert a.history == b.history, f"history diverges {ctx}"
+    assert a.n_pushes == b.n_pushes and a.sim_time == b.sim_time, ctx
+
+
+@pytest.mark.parametrize("sync", [BSP(), ASP(), SSP(1)])
+def test_trace_parity_policies_jitter(sync):
+    """simulate_traced is bit-identical to simulate under every sync
+    policy, with straggler jitter on and mixed worker batch sizes (the
+    executor's size-switch path), evals included."""
+    init, grad_fn, data_fn, loss = quad_problem()
+    ws = [WorkerSpec(8, 32, 1.0, 0.1, 0.3), WorkerSpec(4, 32, 0.8, 0.07, 0.3)]
+    kw = dict(epochs=2, lr_for_epoch=lambda e: 0.02 if e < 1 else 0.004,
+              sync=sync, momentum=0.9, seed=3,
+              eval_fn=lambda p: {"loss": loss(p)})
+    ref = simulate(init, grad_fn, data_fn, ws, **kw)
+    res = simulate_traced(init, grad_fn, data_fn, ws, **kw, scan_chunk=4)
+    _assert_sim_equal(ref, res, f"sync={sync.name}")
+
+
+def test_trace_parity_elastic_join_leave():
+    """An elastic join+leave timeline replays bit-identically: the joiner
+    gets a fresh zero-velocity row in the stacked buffer and the departed
+    worker's events stop, exactly as in the event loop."""
+    init, grad_fn, data_fn, loss = quad_problem()
+    ws = [WorkerSpec(8, 32, 1.0, 0.1, 0.1), WorkerSpec(4, 32, 0.8, 0.07, 0.1)]
+    events = [ClusterEvent(time=0.35, action="join",
+                           worker=WorkerSpec(8, 32, 0.5, 0.1, 0.1)),
+              ClusterEvent(time=0.9, action="leave", worker_id=1)]
+    kw = dict(epochs=2, lr_for_epoch=lambda e: 0.02, sync=ASP(),
+              momentum=0.9, seed=3, events=events,
+              eval_fn=lambda p: {"loss": loss(p)})
+    ref = simulate(init, grad_fn, data_fn, ws, **kw)
+    res = simulate_traced(init, grad_fn, data_fn, ws, **kw, scan_chunk=4)
+    _assert_sim_equal(ref, res, "elastic")
+    assert ref.n_pushes == res.n_pushes > 0
+
+
+def test_schedule_pass_records_event_order():
+    """The schedule pass emits exactly the event sequence the device path
+    executes: same worker order (via the data_fn log), same clock, same
+    push count — and per-worker stream counters that count that worker's
+    own prior events."""
+    log = []
+    init, grad_fn, data_fn, loss = quad_problem(log=log)
+    ws = [WorkerSpec(8, 32, 1.0, 0.1), WorkerSpec(4, 32, 0.8, 0.07)]
+    kw = dict(epochs=2, lr_for_epoch=lambda e: 0.02, sync=ASP(), seed=3)
+    ref = simulate(init, grad_fn, data_fn, ws, momentum=0.0, **kw)
+    trace = schedule_pass(ws, **kw)
+    assert list(trace.worker_id) == log
+    assert trace.n_pushes == ref.n_pushes == trace.n_events
+    assert trace.sim_time == ref.sim_time
+    assert trace.sizes == (4, 8)
+    # stream_step counts each worker's own events, in order
+    seen = {}
+    for wid, t in zip(trace.worker_id, trace.stream_step):
+        assert t == seen.get(wid, 0)
+        seen[wid] = t + 1
+    # per-event update factors/batch sizes mirror the worker specs
+    assert all(trace.update_factor[trace.worker_id == 0] == 1.0)
+    assert all(trace.update_factor[trace.worker_id == 1]
+               == np.float32(0.8))
+    assert all(trace.batch_size[trace.worker_id == 1] == 4)
+
+
+def test_schedule_pass_lr_follows_epoch_schedule():
+    """Per-event lr comes from lr_for_epoch at the worker's OWN epoch."""
+    ws = [WorkerSpec(8, 32, 1.0, 0.1)]     # 4 iters/epoch
+    trace = schedule_pass(ws, epochs=2,
+                          lr_for_epoch=lambda e: 0.1 if e < 1 else 0.02,
+                          sync=BSP(), seed=0)
+    assert list(trace.lr) == [np.float32(0.1)] * 4 + [np.float32(0.02)] * 4
+
+
+def test_trace_chunk_ranges_power_of_two_and_eval_aligned():
+    from repro.cluster.trace import _chunk_ranges
+    ws = [WorkerSpec(8, 40, 1.0, 0.1)]       # 5 iters/epoch
+    trace = schedule_pass(ws, epochs=2, lr_for_epoch=lambda e: 0.1,
+                          sync=BSP(), seed=0)
+    ranges = _chunk_ranges(trace, scan_chunk=4)
+    # 10 events, eval after 5 and 10: [0,4),[4,5) | [5,9),[9,10)
+    assert ranges == [(0, 4), (4, 5), (5, 9), (9, 10)]
+    assert all((e1 - e0) & (e1 - e0 - 1) == 0 for e0, e1 in ranges)
+    bounds = {done for done, _, _ in trace.evals}
+    assert bounds <= {e1 for _, e1 in ranges}
+
+
+def test_trace_runner_cached_per_grad_fn():
+    """Chunk runners cache weakly on grad_fn identity (like the event
+    path's compiled-update cache): repeated simulate_traced calls reuse
+    the executable, and dropping the grad_fn frees the entry."""
+    import gc
+
+    from repro.cluster import trace_scan_cache_size
+    init, grad_fn, data_fn, loss = quad_problem()
+    ws = [WorkerSpec(8, 32, 1.0, 0.1)]
+    kw = dict(epochs=1, lr_for_epoch=lambda e: 0.02, sync=BSP(), seed=0)
+    before = trace_scan_cache_size()
+    r1 = simulate_traced(init, grad_fn, data_fn, ws, **kw)
+    grew = trace_scan_cache_size() - before
+    assert grew >= 1
+    r2 = simulate_traced(init, grad_fn, data_fn, ws, **kw)
+    assert trace_scan_cache_size() - before == grew     # no rebuild
+    assert np.array_equal(np.asarray(r1.params["x"]),
+                          np.asarray(r2.params["x"]))
+    # the cached runner must not pin its grad_fn key (a closure holding
+    # the key strongly would leak one executable per grad_fn identity)
+    del grad_fn, data_fn
+    gc.collect()
+    assert trace_scan_cache_size() == before
+
+
+def test_traced_backend_matches_event_backend():
+    """PsSimBackend(traced=True) returns a bit-identical RunResult to the
+    event-driven backend on a plane-fed multi-phase schedule."""
+    import jax as _jax
+    from repro import models
+    from repro.configs import get_config, reduced
+    from repro.core.dual_batch import solve_plan as _solve
+    from repro.data import DataPlane, SyntheticTokens
+    from repro.engine.phases import single_phase
+    from repro.cluster import PsSimBackend
+
+    cfg = reduced(get_config("phi3-mini-3.8b"), layers=1, d_model=32,
+                  n_heads=2, vocab=32)
+    params = models.init_params(cfg, _jax.random.PRNGKey(0))
+    tm = LinearTimeModel(a=1.0, b=24.6)
+    plan = _solve(tm, B_L=2, d=16, n_workers=4, n_small=2, k=1.05)
+    phases = single_phase(input_size=16, n_steps=2, lr=0.01, batch_size=8,
+                          plan=plan, epochs=1) \
+        + single_phase(input_size=16, n_steps=2, lr=0.002, batch_size=8,
+                       plan=plan, epochs=1)
+    data = SyntheticTokens(vocab=cfg.vocab_size, seed=0, n_examples=64)
+
+    def fns_factory(input_size):
+        def grad_fn(p, b):
+            return _jax.grad(lambda pp: models.loss_fn(pp, cfg, b)[0])(p)
+        return grad_fn, None, None
+
+    def run(traced):
+        be = PsSimBackend(fns_factory, tm=tm, sync=ASP(), momentum=0.9,
+                          plane=DataPlane(data, seed=0), traced=traced,
+                          jitter=0.1)
+        return be.run(phases, _jax.tree_util.tree_map(jnp.copy, params),
+                      seed=0)
+
+    a, b = run(False), run(True)
+    for x, y in zip(_jax.tree_util.tree_leaves(a.params),
+                    _jax.tree_util.tree_leaves(b.params)):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+    assert a.history == b.history and a.phases == b.phases
+    assert a.time == b.time
 
 
 def test_momentum_is_dynamic_not_baked():
