@@ -122,6 +122,23 @@ def check_directional(rows: dict, *, step_tol: float = 0.10) -> list:
             print(f"  directional ok: ps_sim/trace_warm_us={t_us:.1f} <= "
                   f"sweep_warm_us={sw_us:.1f} "
                   f"(+{step_tol * 100:.0f}% tol)")
+    b_us = rows.get("autotune/batched_candidate_us")
+    s_us = rows.get("autotune/seq_candidate_us")
+    if b_us is None or s_us is None:
+        print("  directional: autotune/{batched,seq}_candidate_us missing "
+              "(not run)")
+    elif b_us > s_us:
+        # HARD gate, no tolerance: one vmapped executable over C stacked
+        # candidates must beat C sequential replays of the same chunks —
+        # per-candidate dispatch + feed staging amortize across the batch,
+        # so parity means the batching bought nothing
+        failures.append(
+            f"autotune/batched_candidate_us={b_us:.1f} > "
+            f"seq_candidate_us={s_us:.1f} — batched candidate replay "
+            "lost to sequential trace replay")
+    else:
+        print(f"  directional ok: autotune/batched_candidate_us="
+              f"{b_us:.1f} <= seq_candidate_us={s_us:.1f}")
     return failures
 
 

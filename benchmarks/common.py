@@ -7,22 +7,24 @@ repro/data/synthetic.py), with simulated wall-clock from the paper's Eq. 2
 time model.  Batches flow through the ``repro.data.DataPlane`` (the same
 canonical per-worker streams the SPMD engine consumes); ``make_fns`` keeps
 a legacy ``data_fn`` for callers that drive ``simulate()`` directly.
+
+Every run is constructed from a declarative ``repro.api.ScheduleSpec`` and
+executed through ``repro.api.run`` — the spec's ``seed`` field is the ONE
+seed: model init, dataset, data-plane streams, and per-phase jitter
+streams all derive from it (``run_dbl`` / ``run_hybrid`` below are thin
+spec-building wrappers kept for the table scripts' call shape).
 """
 from __future__ import annotations
 
 import time
-from dataclasses import replace
 
 import jax
 import jax.numpy as jnp
 
-
 from repro import models
-from repro.cluster import ASP, PsSimBackend
-from repro.configs import get_config
-from repro.core import LinearTimeModel, solve_plan
-from repro.engine.phases import Phase
-from repro.optim import staged_lr
+from repro.api import RunConfig, ScheduleSpec, run
+from repro.core import LinearTimeModel
+from repro.tune import TuneProblem, base_spec
 
 # experiment constants (CPU-scale analogue of the paper's CIFAR setup);
 # noise/classes tuned so 6-8 epochs land at ~70% accuracy (comparisons
@@ -37,15 +39,26 @@ WIDTH = 8
 # time model with the paper's fitted b/a ratio (GTX1080/TF, Table 2)
 TM = LinearTimeModel(a=0.001, b=0.0246)
 
+_PROBLEMS: dict = {}     # seed -> (cfg, data, params)
+_FNS: dict = {}          # (seed, resolution) -> (grad_fn, data_fn, eval_fn)
+
 
 def build_problem(seed: int = 0):
-    from repro.data import SyntheticImages
-    cfg = replace(get_config("cifar-resnet18"), d_model=WIDTH,
-                  vocab_size=NUM_CLASSES)
-    data = SyntheticImages(n_train=N_TRAIN, n_test=N_TEST,
-                           num_classes=NUM_CLASSES, noise=NOISE, seed=seed)
-    params = models.init_params(cfg, jax.random.PRNGKey(seed))
-    return cfg, data, params
+    """(cfg, data, init_params) for ``seed`` — memoized so every run of a
+    sweep shares one dataset + init and the jitted fns stay cache-hot."""
+    if seed not in _PROBLEMS:
+        from dataclasses import replace
+
+        from repro.configs import get_config
+        from repro.data import SyntheticImages
+        cfg = replace(get_config("cifar-resnet18"), d_model=WIDTH,
+                      vocab_size=NUM_CLASSES)
+        data = SyntheticImages(n_train=N_TRAIN, n_test=N_TEST,
+                               num_classes=NUM_CLASSES, noise=NOISE,
+                               seed=seed)
+        params = models.init_params(cfg, jax.random.PRNGKey(seed))
+        _PROBLEMS[seed] = (cfg, data, params)
+    return _PROBLEMS[seed]
 
 
 def make_fns(cfg, data, resolution: int):
@@ -75,72 +88,85 @@ def make_fns(cfg, data, resolution: int):
     return grad_fn, data_fn, eval_fn
 
 
+def fns_for(seed: int, resolution: int):
+    """Memoized ``make_fns`` over the seed's problem — the autotuner and
+    multi-phase schedules revisit resolutions; reuse the compiled fns."""
+    key = (seed, resolution)
+    if key not in _FNS:
+        cfg, data, _ = build_problem(seed)
+        _FNS[key] = make_fns(cfg, data, resolution)
+    return _FNS[key]
+
+
+def tune_problem() -> TuneProblem:
+    """The benchmark problem in the autotuner's contract — everything
+    keyed by the candidate spec's own seed."""
+    from repro.data import DataPlane
+    planes: dict = {}
+
+    def plane_for(seed: int):
+        if seed not in planes:
+            _, data, _ = build_problem(seed)
+            planes[seed] = DataPlane(data, seed=seed)
+        return planes[seed]
+
+    return TuneProblem(init_for=lambda seed: build_problem(seed)[2],
+                       fns_for=fns_for, plane_for=plane_for)
+
+
+def run_spec(spec: ScheduleSpec, config: RunConfig | None = None, *,
+             params=None):
+    """Execute ``spec`` on the benchmark problem via ``repro.api.run``.
+    Dataset, init params, data plane and phase streams all derive from
+    ``spec.seed`` (pass ``params`` only to override the init)."""
+    _, data, p0 = build_problem(spec.seed)
+    return run(spec, config, init_params=params if params is not None
+               else p0, fns_factory=lambda r: fns_for(spec.seed, r),
+               data=data)
+
+
+def _spec_overrides(tm: LinearTimeModel, lr: float):
+    return dict(tm_a=tm.a, tm_b=tm.b, lr=lr)
+
+
 def run_dbl(*, n_small: int, k: float = 1.05, factor: str = "ds_over_dl",
             epochs: int = 8, resolution: int = 32, lr: float = 0.05,
             seed: int = 0, params=None, tm: LinearTimeModel = TM,
             sync="asp", jitter=0.0, traced: bool = False,
             trace_chunk: int = 8):
-    """One dual-batch-learning run on the PS-sim backend; returns
-    (final eval, sim_time, params, plan).  ``sync`` takes a SyncPolicy
-    object (or the legacy string).  ``traced=True`` runs each phase
-    through the trace-compiled simulator (same timeline/samples/epoch
-    structure; bit-identical for matmul models, float-epsilon conv
-    reassociation on CPU) — worth flipping for wide sweeps on small
-    models/accelerators; the conv workload here is compute-bound on CPU,
-    so the default stays on the event path."""
-    cfg, data, p0 = build_problem(seed)
-    if params is not None:
-        p0 = params
-    plan = solve_plan(tm, B_L=B_L, d=N_TRAIN, n_workers=N_WORKERS,
-                      n_small=n_small, k=k, factor=factor) \
-        if n_small else solve_plan(tm, B_L=B_L, d=N_TRAIN,
-                                   n_workers=N_WORKERS, n_small=0, k=1.0)
-    phases = (Phase(input_size=resolution, n_steps=0, lr=lr,
-                    batch_size=B_L, epochs=epochs, plan=plan,
-                    lr_for_epoch=staged_lr([epochs * 3 // 4, epochs],
-                                           [lr, lr / 5])),)
-    from repro.data import DataPlane
-    backend = PsSimBackend(lambda r: make_fns(cfg, data, r), tm=tm,
-                           axis="resolution", sync=sync, jitter=jitter,
-                           plane=DataPlane(data, seed=seed),
-                           traced=traced, trace_chunk=trace_chunk)
-    res = backend.run(phases, p0, seed=seed)
-    return res.last, res.time, res.params, plan
+    """One dual-batch-learning run; returns (final eval, sim_time,
+    params, plan).  Thin wrapper: builds the ``ScheduleSpec`` and runs it
+    through ``repro.api.run``.  ``sync`` takes a SyncPolicy object or the
+    legacy string; ``traced=True`` replays each phase through the
+    trace-compiled simulator (same timeline/samples/epoch structure)."""
+    spec = base_spec(epochs=epochs, n_small=n_small, k=k, factor=factor,
+                     seed=seed, input_size=resolution,
+                     **_spec_overrides(tm, lr),
+                     lr_stage_lrs=(lr, lr / 5))
+    cfg = RunConfig(jitter=jitter, traced=traced, trace_chunk=trace_chunk,
+                    sync=None if isinstance(sync, str) else sync)
+    if isinstance(sync, str):
+        spec = spec.replace(sync=sync)
+    res = run_spec(spec, cfg, params=params)
+    return res.last, res.time, res.params, spec.plan()
 
 
 def run_hybrid(*, n_small: int, k: float = 1.05,
                factor: str = "ds_over_dl", epochs: int = 8,
                resolutions=(24, 32), lr: float = 0.05, seed: int = 0,
                tm: LinearTimeModel = TM):
-    """Hybrid: per sub-stage, re-solve DBL at the resolution-adapted B_L;
-    the whole CPL x DBL schedule is one Phase list on the PS-sim backend
-    (params carry across phases, fns memoized per resolution so revisited
-    sizes don't recompile)."""
-    from repro.cluster import scaled_time_model
-    from repro.core import adapt_batch
-    cfg, data, params = build_problem(seed)
+    """Hybrid CPL x DBL; returns (final eval, sim_time, params).  Thin
+    wrapper: one hybrid ``ScheduleSpec`` (per sub-stage, DBL re-solved at
+    the resolution-adapted B_L) run through ``repro.api.run``."""
     r_max = max(resolutions)
-    sub_epochs = max(1, epochs // len(resolutions))
-    phases = []
-    for stage_lr in (lr, lr / 5):
-        for r in resolutions:
-            tm_sub = scaled_time_model(tm, r, r_max, axis="resolution")
-            bl_r = adapt_batch(B_L, r_max, r)
-            plan = solve_plan(tm_sub, B_L=bl_r, d=N_TRAIN,
-                              n_workers=N_WORKERS, n_small=n_small, k=k,
-                              factor=factor) if n_small else \
-                solve_plan(tm_sub, B_L=bl_r, d=N_TRAIN,
-                           n_workers=N_WORKERS, n_small=0, k=1.0)
-            phases.append(Phase(input_size=r, n_steps=0, lr=stage_lr,
-                                batch_size=bl_r,
-                                epochs=max(1, sub_epochs // 2), plan=plan))
-    from repro.data import DataPlane
-    backend = PsSimBackend(lambda r: make_fns(cfg, data, r), tm=tm,
-                           axis="resolution", sync=ASP(), ref_size=r_max,
-                           plane=DataPlane(data, seed=seed))
-    res = backend.run(tuple(phases), params, seed=seed)
+    spec = base_spec(epochs=epochs, n_small=n_small, k=k, factor=factor,
+                     seed=seed, scheme="hybrid", input_size=r_max,
+                     sub_sizes=tuple(resolutions),
+                     **_spec_overrides(tm, lr),
+                     lr_stage_epochs=(), lr_stage_lrs=())
+    res = run_spec(spec)
     # final eval at full resolution
-    _, _, eval_fn = make_fns(cfg, data, r_max)
+    _, _, eval_fn = fns_for(seed, r_max)
     last = {**res.last, **eval_fn(res.params)}
     return last, res.time, res.params
 

@@ -1,28 +1,29 @@
 """Paper Table 9/10 (ImageNet): schedule-level time accounting.
 
-Full ImageNet training is out of scope on CPU; this benchmark reproduces the
-paper's *time* claim analytically from the hybrid schedule: with resolutions
-(160, 224, 288) and the paper's stage layout, predicted hybrid time is ~35%
-below DBL-only (paper: 34.8%), because the size ratio 160^2/288^2 = 0.31."""
+Full ImageNet training is out of scope on CPU; this benchmark reproduces
+the paper's *time* claim analytically from one declarative
+``ScheduleSpec`` per scheme: with resolutions (160, 224, 288) and the
+paper's stage layout, the hybrid spec's predicted time
+(``tune.predicted_schedule_time`` — the same pricing the autotuner prunes
+with) lands ~35% below the flat DBL spec's (paper: 34.8%), because the
+size ratio 160^2/288^2 = 0.31."""
 from __future__ import annotations
 
-from repro.core import (LinearTimeModel, hybrid_schedule,
-                        predicted_total_time, solve_plan)
+from repro.api import ScheduleSpec
+from repro.tune import predicted_schedule_time
 
 
-def run(quick: bool = True):
-    tm = LinearTimeModel(a=1.0, b=24.57)
-    stages, lrs = (60, 30, 15), (0.2, 0.02, 0.002)
-    res = (160, 224, 288)
-    drops = (0.1, 0.2, 0.3)
-    d = 1_281_167
-    phases = hybrid_schedule(tm, stages=stages, stage_lrs=lrs,
-                             sub_sizes=res, sub_dropouts=drops,
-                             B_L_ref=740, dataset_size=d, n_workers=4,
-                             n_small=3, k=1.05)
-    t_hybrid = predicted_total_time(phases, tm)
-    dbl = solve_plan(tm, B_L=740, d=d, n_workers=4, n_small=3, k=1.05)
-    t_dbl = sum(stages) * dbl.predicted_epoch_time(tm)
+def run(quick: bool = True, seed: int = 0):
+    base = ScheduleSpec(
+        scheme="dbl", input_size=288, axis="resolution", batch_size=740,
+        dataset_size=1_281_167, n_workers=4, n_small=3, k=1.05,
+        epochs=105, lr=0.2, tm_a=1.0, tm_b=24.57, seed=seed)
+    hybrid = base.replace(
+        scheme="hybrid", sub_sizes=(160, 224, 288),
+        sub_dropouts=(0.1, 0.2, 0.3), stage_epochs=(60, 30, 15),
+        stage_lrs=(0.2, 0.02, 0.002))
+    t_dbl = predicted_schedule_time(base)
+    t_hybrid = predicted_schedule_time(hybrid)
     saving = 1 - t_hybrid / t_dbl
     rows = [
         ("table10/dbl_pred_time", t_dbl, ""),
@@ -31,7 +32,7 @@ def run(quick: bool = True):
         ("table10/size_ratio", (160 / 288) ** 2, "paper=0.31"),
     ]
     # paper Table 6 check: B_L per resolution from memory adaptation
-    bls = [p.dbl.B_L for p in phases[:3]]
+    bls = [p.plan.B_L for p in hybrid.to_phases()[:3]]
     rows.append(("table10/B_L_per_res", 0,
                  f"ours={bls} paper=[2330,1110,740]"))
     return rows

@@ -7,16 +7,16 @@ from __future__ import annotations
 from benchmarks.common import run_dbl
 
 
-def run(quick: bool = True):
+def run(quick: bool = True, seed: int = 0):
     epochs = 8 if quick else 16
-    seeds = (0, 1, 2) if quick else (0, 1, 2, 3, 4)
+    seeds = tuple(seed + i for i in range(3 if quick else 5))
     rows = []
     means = {}
     for factor in ("ds_over_dl", "sqrt", "none"):
         accs, losses, sim_t = [], [], 0.0
-        for seed in seeds:
+        for s in seeds:
             last, sim_t, _, plan = run_dbl(n_small=3, k=1.1, factor=factor,
-                                           epochs=epochs, seed=seed)
+                                           epochs=epochs, seed=s)
             accs.append(last["test_acc"])
             losses.append(last["test_loss"])
         import numpy as np

@@ -16,7 +16,7 @@ import os
 from benchmarks.common import run_dbl
 
 
-def run(quick: bool = True, traced: bool | None = None):
+def run(quick: bool = True, traced: bool | None = None, seed: int = 0):
     if traced is None:
         traced = os.environ.get("TABLE5_TRACED", "") == "1"
     epochs = 6 if quick else 16
@@ -24,7 +24,7 @@ def run(quick: bool = True, traced: bool | None = None):
     accs = {}
     for n_small in range(0, 5):
         last, sim_t, _, plan = run_dbl(n_small=n_small, k=1.05,
-                                       epochs=epochs, seed=0,
+                                       epochs=epochs, seed=seed,
                                        traced=traced)
         accs[n_small] = last["test_acc"]
         share = plan.small_data_fraction

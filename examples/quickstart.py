@@ -1,11 +1,13 @@
-"""Quickstart: solve a dual-batch plan (paper Eq. 4-8), inspect it, and run
-a short dual-batch training on a reduced LLM config.
+"""Quickstart: solve a dual-batch plan (paper Eq. 4-8), declare the same
+settings as ONE serializable ``ScheduleSpec`` (the ``repro.api`` search
+point the autotuner sweeps over), and run a short dual-batch training on
+a reduced LLM config.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 
-from repro.core import LinearTimeModel, plan_table, solve_plan
+from repro.core import LinearTimeModel, plan_table
 
 # 1) Fit (or supply) the Eq. 2 time model: t_batch(x) = a*x + b.
 #    Here: the paper's GTX1080/TensorFlow ratio b/a = 24.57 (Table 2).
@@ -17,18 +19,33 @@ for plan in plan_table(tm, B_L=500, d=50_000, n_workers=4, k=1.05):
     print(f"  n_S={plan.n_small}: B_S={plan.B_S:4d}  d_S={plan.d_S:8.0f}  "
           f"d_L={plan.d_L:8.0f}  factor={plan.update_factor_small:.3f}")
 
-# 3) The same plan drives the synchronous SPMD layout (DESIGN.md §4):
+# 3) The same settings as ONE declarative spec (repro.api).  The spec is
+#    what every entrypoint consumes (repro.api.run, the launch CLI, the
+#    table benchmarks) and what the schedule autotuner searches over; it
+#    serializes canonically, so its hash names the run's artifacts.
+from repro.api import ScheduleSpec
+
+spec = ScheduleSpec(scheme="dbl", input_size=32, batch_size=500,
+                    dataset_size=50_000, n_workers=4, n_small=3, k=1.05,
+                    tm_a=1.0, tm_b=24.57)
+plan = spec.plan()                      # == solve_plan(tm, B_L=500, ...)
+assert ScheduleSpec.from_json(spec.to_json()) == spec   # bit-stable JSON
+print(f"\nspec.plan(): n_S={plan.n_small}  B_S={plan.B_S}  "
+      f"factor={plan.update_factor_small:.3f}  "
+      f"(run_key {spec.run_key()} from canonical JSON)")
+
+# 4) The plan drives the synchronous SPMD layout (DESIGN.md §4):
 from repro.core import layout_from_plan
 
-plan = solve_plan(tm, B_L=500, d=50_000, n_workers=4, n_small=3, k=1.05)
 layout = layout_from_plan(plan, global_batch=32)
-print(f"\nSPMD layout: {layout.n_workers} worker-rows x "
+print(f"SPMD layout: {layout.n_workers} worker-rows x "
       f"{layout.per_worker} examples, small group keeps "
       f"{layout.small_valid}/{layout.per_worker} rows at factor "
       f"{layout.factor_small:.3f}")
 print("per-example weights:", layout.weights())
 
-# 4) Short dual-batch training run on a reduced config (CPU).
+# 5) Short dual-batch training run on a reduced config (CPU).  The CLI
+#    builds a ScheduleSpec from its flags and hands it to repro.api.run.
 print("\nshort dual-batch training (reduced phi3):")
 from repro.launch.train import run
 

@@ -1,7 +1,7 @@
 """End-to-end driver (paper-faithful): ResNet-18 (full width, ~11M params)
-trained with baseline / dual-batch / hybrid schemes — a thin front-end over
-``repro.engine``: each scheme is a phase schedule (hybrid comes straight
-from ``hybrid_schedule``) executed on the event-driven parameter-server
+trained with baseline / dual-batch / hybrid schemes — each scheme is ONE
+declarative ``ScheduleSpec`` (they differ only in the fields a ``replace``
+touches) executed by ``repro.api.run`` on the event-driven parameter-server
 simulator with synthetic CIFAR-like data, reporting accuracy AND simulated
 wall-clock (the paper's two evaluation axes).
 
@@ -15,11 +15,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import models
-from repro.cluster import ASP, BSP
+from repro.api import ScheduleSpec
+from repro.api import run as api_run
 from repro.configs import get_config
-from repro.core import LinearTimeModel, hybrid_schedule, solve_plan
-from repro.data import DataPlane, SyntheticImages
-from repro.engine import phases_from_hybrid, run_sim, single_phase
+from repro.data import SyntheticImages
 
 
 def main():
@@ -38,9 +37,6 @@ def main():
     n_params = sum(np.prod(np.shape(l)) for l in jax.tree_util.tree_leaves(
         models.init_params(cfg, jax.random.PRNGKey(0))))
     print(f"ResNet-18 width {width}: {n_params/1e6:.1f}M params")
-
-    tm = LinearTimeModel(a=0.001, b=0.0246)
-    B_L, d, n = 64, 2048, 4
 
     def fns_factory(resolution):
         @jax.jit
@@ -63,45 +59,40 @@ def main():
     def init():
         return models.init_params(cfg, jax.random.PRNGKey(0))
 
+    # One base spec; the three schemes are field-level deltas on it.  The
+    # paper's two LR stages (lr, lr/5-ish) live in the spec: flat schemes
+    # as a staged-LR schedule, hybrid as per-LR-stage CPL ladders 24 -> 32.
+    base = ScheduleSpec(
+        scheme="baseline", input_size=32, axis="resolution", batch_size=64,
+        dataset_size=2048, n_workers=4, n_small=3, k=1.05, epochs=epochs,
+        lr=0.05, lr_stage_epochs=(epochs * 3 // 4, epochs),
+        lr_stage_lrs=(0.05, 0.01), tm_a=0.001, tm_b=0.0246, sync="bsp",
+        seed=0)
+    specs = {
+        "baseline": base,                   # all-large BSP (n_small forced 0)
+        "dual-batch": base.replace(scheme="dbl", sync="asp"),
+        "hybrid": base.replace(scheme="hybrid", sync="asp",
+                               lr_stage_epochs=(), lr_stage_lrs=(),
+                               sub_sizes=(24, 32), sub_dropouts=(0.0, 0.0),
+                               stage_epochs=(epochs // 2, epochs // 2),
+                               stage_lrs=(0.05, 0.01)),
+    }
+
     results = {}
-
-    # --- baseline: all-large BSP (two LR stages) -------------------------
-    plan0 = solve_plan(tm, B_L=B_L, d=d, n_workers=n, n_small=0, k=1.0)
-    phases = single_phase(input_size=32, n_steps=0, lr=0.05,
-                          batch_size=B_L, plan=plan0,
-                          epochs=epochs * 3 // 4) \
-        + single_phase(input_size=32, n_steps=0, lr=0.01, batch_size=B_L,
-                       plan=plan0, epochs=epochs - epochs * 3 // 4)
-    res = run_sim(phases, init(), fns_factory, tm=tm, sync=BSP(),
-                  plane=DataPlane(data, seed=0))
-    results["baseline"] = (res.last, res.time)
-
-    # --- dual-batch learning (ASP, 3 small workers, k=1.05) --------------
-    plan = solve_plan(tm, B_L=B_L, d=d, n_workers=n, n_small=3, k=1.05)
-    phases = single_phase(input_size=32, n_steps=0, lr=0.05,
-                          batch_size=B_L, plan=plan,
-                          epochs=epochs * 3 // 4) \
-        + single_phase(input_size=32, n_steps=0, lr=0.01, batch_size=B_L,
-                       plan=plan, epochs=epochs - epochs * 3 // 4)
-    res = run_sim(phases, init(), fns_factory, tm=tm, sync=ASP(),
-                  plane=DataPlane(data, seed=0))
-    results["dual-batch"] = (res.last, res.time)
-
-    # --- hybrid: CPL sub-stages 24 -> 32 under each LR stage -------------
-    hp = hybrid_schedule(tm, stages=(epochs // 2, epochs // 2),
-                         stage_lrs=(0.05, 0.01), sub_sizes=(24, 32),
-                         sub_dropouts=(0.0, 0.0), B_L_ref=B_L,
-                         dataset_size=d, n_workers=n, n_small=3, k=1.05,
-                         axis="resolution")
-    phases = phases_from_hybrid(hp, total_steps=0, global_batch=B_L,
-                                axis="resolution")
-    res = run_sim(phases, init(), fns_factory, tm=tm, sync=ASP(),
-                  axis="resolution", plane=DataPlane(data, seed=0))
-    _, _, eval_fn = fns_factory(32)
-    last = {**res.last, **eval_fn(res.params)}
-    results["hybrid"] = (last, res.time)
-    print(f"hybrid history: {len(res.history)} epoch records over "
-          f"{len(res.phases)} phases (absolute sim-time offsets)")
+    for name, spec in specs.items():
+        # data= -> the run builds its DataPlane seeded from spec.seed, so
+        # the spec alone pins the per-(phase, worker, step) sample streams
+        res = api_run(spec, init_params=init(), fns_factory=fns_factory,
+                      data=data)
+        last = res.last
+        if spec.scheme == "hybrid":
+            # final full-resolution eval (the ladder ends at 32 but the
+            # last epoch record may predate the merge)
+            _, _, eval_fn = fns_factory(spec.input_size)
+            last = {**last, **eval_fn(res.params)}
+            print(f"hybrid history: {len(res.history)} epoch records over "
+                  f"{len(res.phases)} phases (absolute sim-time offsets)")
+        results[name] = (last, res.time)
 
     print(f"\n{'scheme':<12} {'test_acc':>8} {'test_loss':>9} "
           f"{'sim_time_s':>10}")

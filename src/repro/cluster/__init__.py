@@ -20,16 +20,18 @@ from repro.cluster.simulator import (SimResult, local_update_cache_size,
 from repro.cluster.sync import ASP, BSP, SSP, SyncPolicy, as_policy
 from repro.cluster.topology import (ClusterEvent, WorkerSpec,
                                     workers_from_plan)
-from repro.cluster.trace import (SimTrace, execute_trace, schedule_pass,
-                                 simulate_traced, trace_scan_cache_size)
+from repro.cluster.trace import (SimTrace, execute_trace,
+                                 execute_trace_batched, schedule_pass,
+                                 simulate_traced, trace_scan_cache_size,
+                                 trace_signature)
 
 __all__ = [
     "SyncPolicy", "BSP", "ASP", "SSP", "as_policy",
     "WorkerSpec", "ClusterEvent", "workers_from_plan",
     "SimResult", "simulate", "local_update_for", "local_update_cache_size",
     "run_event_loop",
-    "SimTrace", "schedule_pass", "execute_trace", "simulate_traced",
-    "trace_scan_cache_size",
+    "SimTrace", "schedule_pass", "execute_trace", "execute_trace_batched",
+    "simulate_traced", "trace_scan_cache_size", "trace_signature",
     "Backend", "RunResult", "PsSimBackend", "SpmdBackend",
     "phase_record", "phase_seed", "scaled_time_model",
 ]

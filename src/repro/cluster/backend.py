@@ -59,10 +59,9 @@ def _as_tree(params):
 def scaled_time_model(tm: LinearTimeModel, input_size: int, ref_size: int,
                       *, axis: str = "resolution") -> LinearTimeModel:
     """Per-sample cost scales with the input cost (r² or s); overhead b is
-    size-independent (paper §4.2)."""
-    scale = ((input_size / ref_size) ** 2 if axis == "resolution"
-             else input_size / ref_size)
-    return LinearTimeModel(a=tm.a * scale, b=tm.b)
+    size-independent (paper §4.2).  Thin front over
+    ``LinearTimeModel.scaled`` (the canonical rescaling rule)."""
+    return tm.scaled(input_size, ref_size, axis=axis)
 
 
 def phase_seed(seed: int, phase_idx: int) -> int:

@@ -70,7 +70,8 @@ from repro.cluster.simulator import SimResult, run_event_loop
 from repro.cluster.sync import SyncPolicy, as_policy
 from repro.cluster.topology import ClusterEvent, WorkerSpec
 from repro.core.flat import flat_spec
-from repro.kernels.dbl_merge import dbl_apply_worker_flat2d
+from repro.kernels.dbl_merge import (dbl_apply_worker_flat2d,
+                                     dbl_apply_worker_xla)
 
 
 @dataclass(frozen=True)
@@ -252,16 +253,13 @@ def resolve_update(update: str) -> str:
     return "pallas" if jax.default_backend() == "tpu" else "xla"
 
 
-def _build_chunk_runner(grad_fn: Callable, spec, sizes: Tuple[int, ...],
-                        interpret: Optional[bool], loop: str, update: str,
-                        weak: bool = True):
-    # hold grad_fn weakly when the runner lives in the weak-keyed cache: a
-    # closure holding its own cache key strongly would pin the entry (and
-    # its compiled executable) forever — same discipline as
-    # simulator._build_local_update.  Re-traces only happen through
-    # trace_runner_for, whose caller holds grad_fn, so the ref stays live
-    # whenever it is dereferenced.
-    ref = weakref.ref(grad_fn) if weak else (lambda: grad_fn)
+def _make_event(ref: Callable, spec, sizes: Tuple[int, ...], update: str,
+                interpret: Optional[bool]):
+    """One simulated-PS event as a pure function of the scan carry:
+    grad at the event's (padded) batch, then the fused momentum +
+    factor-scaled server push.  Shared verbatim by the sequential chunk
+    runner and the batched candidate runner (which vmaps it), so the two
+    replay paths cannot drift apart in float op order."""
 
     def event(p2c, vel, b, w, l, f, s, momentum):
         def grad_at(k, b):
@@ -280,20 +278,25 @@ def _build_chunk_runner(grad_fn: Callable, spec, sizes: Tuple[int, ...],
         if update == "pallas":
             return dbl_apply_worker_flat2d(p2c, g2, vel, w, l, f, momentum,
                                            interpret=interpret)
-        # XLA form of the same update, float op order identical to the
-        # kernel and to the event path's jitted local_update (bit-parity);
-        # the dynamic-update-slice runs in place on the donated buffer.
-        # The barrier mirrors local_update's: without it XLA may fold the
-        # update math into the backward epilogue of the chunk graph, the
-        # exact bit-moving fusion the opaque Pallas kernel prevents on the
-        # other branch.
-        g2 = jax.lax.optimization_barrier(g2)
-        vrow = jax.lax.dynamic_slice_in_dim(vel, w, 1, 0)[0]
-        v = momentum * vrow + g2
-        d = -l * v
-        p2c = p2c + f * d
-        vel = jax.lax.dynamic_update_slice_in_dim(vel, v[None], w, 0)
-        return p2c, vel
+        # XLA form of the same update (see dbl_apply_worker_xla): float op
+        # order identical to the kernel and to the event path's jitted
+        # local_update (bit-parity); the dynamic-update-slice runs in
+        # place on the donated buffer.
+        return dbl_apply_worker_xla(p2c, g2, vel, w, l, f, momentum)
+    return event
+
+
+def _build_chunk_runner(grad_fn: Callable, spec, sizes: Tuple[int, ...],
+                        interpret: Optional[bool], loop: str, update: str,
+                        weak: bool = True):
+    # hold grad_fn weakly when the runner lives in the weak-keyed cache: a
+    # closure holding its own cache key strongly would pin the entry (and
+    # its compiled executable) forever — same discipline as
+    # simulator._build_local_update.  Re-traces only happen through
+    # trace_runner_for, whose caller holds grad_fn, so the ref stays live
+    # whenever it is dereferenced.
+    ref = weakref.ref(grad_fn) if weak else (lambda: grad_fn)
+    event = _make_event(ref, spec, sizes, update, interpret)
 
     if loop == "scan":
         def run_chunk(p2, vel3, batches, wid, lr, factor, sc, momentum):
@@ -349,6 +352,207 @@ def trace_runner_for(grad_fn: Callable, spec, sizes: Tuple[int, ...],
 
 def trace_scan_cache_size() -> int:
     return sum(len(d) for d in _TRACE_SCANS.values())
+
+
+# --------------------------------------------------------------------------
+# batched candidate replay (the autotuner's sweep executor)
+# --------------------------------------------------------------------------
+def trace_signature(trace: SimTrace) -> tuple:
+    """Everything that must match for two traces to share one compiled
+    batched replay: worker/batch/stream timeline, eval markers, sizes and
+    worker count.  Per-event lr / update_factor are NOT in the signature —
+    they are traced operands of the chunk executable, which is exactly
+    what lets factor / LR-schedule / seed candidates replay together."""
+    return (trace.n_workers, trace.sizes, trace.evals,
+            trace.worker_id.tobytes(), trace.batch_size.tobytes(),
+            trace.stream_step.tobytes())
+
+
+def _build_batched_runner(grad_fn: Callable, spec, sizes: Tuple[int, ...],
+                          interpret: Optional[bool], loop: str,
+                          per_cand_data: bool, weak: bool = True):
+    """One compiled chunk executable over a stacked candidate axis: params
+    ``(C, rows, LANE)``, velocities ``(C, n_workers, rows, LANE)``, per
+    event lr/factor ``(C,)`` — the same ``_make_event`` body as the
+    sequential runner, vmapped.  The update form is always the XLA
+    elementwise one (``dbl_apply_worker_xla``): it vmaps to clean batched
+    HLO with the identical float op order, while a vmapped interpret-mode
+    ``pallas_call`` would only multiply emulation overhead.
+    ``per_cand_data`` selects whether event batches carry a candidate
+    axis (independent data streams) or are broadcast (shared data)."""
+    ref = weakref.ref(grad_fn) if weak else (lambda: grad_fn)
+    event = _make_event(ref, spec, sizes, "xla", interpret)
+    # in_axes: params/velocity/lr/factor/momentum per candidate; wid and
+    # size class are timeline facts shared by signature
+    vevent = jax.vmap(event, in_axes=(0, 0, 0 if per_cand_data else None,
+                                      None, 0, 0, None, 0))
+
+    if loop == "scan":
+        def run_chunk(pC, velC, batches, wid, lrC, facC, sc, momC):
+            bt = jax.tree_util.tree_map(
+                lambda v: jnp.moveaxis(v, 1, 0) if per_cand_data else v,
+                batches)
+
+            def body(carry, xs):
+                b, w, l, f, s = xs
+                return vevent(*carry, b, w, l, f, s, momC), ()
+            (pC, velC), _ = jax.lax.scan(
+                body, (pC, velC), (bt, wid, lrC.T, facC.T, sc))
+            return pC, velC
+    else:
+        def run_chunk(pC, velC, batches, wid, lrC, facC, sc, momC):
+            for e in range(wid.shape[0]):
+                b = jax.tree_util.tree_map(
+                    lambda v: v[:, e] if per_cand_data else v[e], batches)
+                pC, velC = vevent(pC, velC, b, wid[e], lrC[:, e],
+                                  facC[:, e], sc[e], momC)
+            return pC, velC
+    return jax.jit(run_chunk, donate_argnums=(0, 1))
+
+
+def batched_trace_runner_for(grad_fn: Callable, spec,
+                             sizes: Tuple[int, ...],
+                             interpret: Optional[bool], loop: str,
+                             per_cand_data: bool):
+    """Cached batched chunk runner — same weak-keyed cache as the
+    sequential runners (one ``"batched"``-tagged key per configuration);
+    jit specializes per candidate count underneath."""
+    key = (id(spec), sizes, interpret, loop, "batched", per_cand_data)
+    try:
+        per_fn = _TRACE_SCANS.get(grad_fn)
+    except TypeError:
+        return _build_batched_runner(grad_fn, spec, sizes, interpret, loop,
+                                     per_cand_data, weak=False)
+    if per_fn is None:
+        per_fn = {}
+        try:
+            _TRACE_SCANS[grad_fn] = per_fn
+        except TypeError:
+            return _build_batched_runner(grad_fn, spec, sizes, interpret,
+                                         loop, per_cand_data, weak=False)
+    if key not in per_fn:
+        per_fn[key] = _build_batched_runner(grad_fn, spec, sizes, interpret,
+                                            loop, per_cand_data)
+    return per_fn[key]
+
+
+def _zip_feeds(feeds, trace: SimTrace, ranges):
+    """Zip per-candidate event-order feeds into candidate-stacked chunks:
+    each candidate's staged ``(chunk, b_max, ...)`` leaves gain a leading
+    candidate axis.  Every underlying feed keeps its own prefetch thread,
+    so staging overlaps the compiled chunk exactly as in the sequential
+    path — once, per candidate stream."""
+    iters = [iter(f(trace, ranges)) for f in feeds]
+    for _ in ranges:
+        staged = [next(it) for it in iters]
+        yield jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *staged)
+
+
+def execute_trace_batched(init_params_list, grad_fn: Callable,
+                          traces: Sequence[SimTrace], *,
+                          feed=None, feeds=None, data_fn=None,
+                          momentum=0.9, eval_fn: Optional[Callable] = None,
+                          eval_fns: Optional[Sequence[Callable]] = None,
+                          seed: int = 0, scan_chunk: int = 32,
+                          interpret: Optional[bool] = None,
+                          prefetch: bool = True,
+                          loop: str = "unroll") -> List[SimResult]:
+    """Replay MANY same-timeline traces as ONE stacked device run.
+
+    All traces must share a ``trace_signature`` (same worker/batch/stream
+    timeline, evals, sizes — candidates may differ in per-event lr,
+    update factor, momentum, initial params and data).  Candidate state is
+    stacked along a leading axis — params ``(C, rows, LANE)``, velocities
+    ``(C, n_workers, rows, LANE)`` — and each chunk executes as one
+    compiled vmapped call, so C candidates cost one dispatch sequence and
+    one staging pass instead of C: the autotuner's per-candidate replay
+    cost drops well below a single sequential ``execute_trace``.
+
+    Data: ``feed`` (one event-order feed shared by every candidate — the
+    factor/LR-sweep case, where sample streams are identical) or
+    ``feeds`` (one per candidate — the multi-seed case; staged chunks are
+    stacked along the candidate axis) or a legacy shared ``data_fn``.
+    Evals: ``eval_fn`` applied to every candidate, or per-candidate
+    ``eval_fns``.  ``momentum`` may be a scalar or a per-candidate
+    sequence.
+
+    The update form is the XLA-elementwise ``dbl_apply_worker_xla`` under
+    ``jax.vmap`` — identical float op order to the sequential replay, so
+    for f32 params each candidate's result is bit-identical to its own
+    ``execute_trace`` run (asserted by tests/test_tune.py).
+    Returns one ``SimResult`` per candidate, in input order.
+    """
+    traces = list(traces)
+    if not traces:
+        return []
+    if len(init_params_list) != len(traces):
+        raise ValueError(f"{len(init_params_list)} init params for "
+                         f"{len(traces)} traces")
+    sig0 = trace_signature(traces[0])
+    for i, t in enumerate(traces[1:], 1):
+        if trace_signature(t) != sig0:
+            raise ValueError(
+                f"trace {i} has a different signature (timeline/evals/"
+                "sizes) — batched replay shares ONE compiled chunk "
+                "executable, so candidates must share the event timeline; "
+                "group by trace_signature() and replay groups separately")
+    trace = traces[0]
+    n_cand = len(traces)
+    if feeds is not None and len(feeds) != n_cand:
+        raise ValueError(f"{len(feeds)} feeds for {n_cand} traces")
+    if feed is None and feeds is None:
+        if data_fn is None:
+            raise ValueError("execute_trace_batched needs feed, feeds or "
+                             "a data_fn")
+        feed = data_fn_feed(data_fn, seed, prefetch=prefetch)
+    spec = flat_spec(init_params_list[0])
+    pC = jnp.stack([spec.ravel_jit(p) for p in init_params_list])
+    velC = spec.zeros_candidates(n_cand, max(1, trace.n_workers))
+    lrC = jnp.asarray(np.stack([t.lr for t in traces]))
+    facC = jnp.asarray(np.stack([t.update_factor for t in traces]))
+    momC = jnp.broadcast_to(
+        jnp.asarray(momentum, jnp.float32), (n_cand,))
+    if eval_fns is None and eval_fn is not None:
+        eval_fns = [eval_fn] * n_cand
+    histories: List[List[dict]] = [[] for _ in range(n_cand)]
+
+    def fire(fired):
+        for epoch, t in fired:
+            for i in range(n_cand):
+                rec = {"epoch": epoch, "sim_time": t}
+                if eval_fns is not None:
+                    rec.update(eval_fns[i](spec.unravel_jit(pC[i])))
+                histories[i].append(rec)
+
+    ranges = _chunk_ranges(trace, scan_chunk)
+    if ranges:
+        run = batched_trace_runner_for(grad_fn, spec, trace.sizes,
+                                       interpret, loop,
+                                       per_cand_data=feeds is not None)
+        sc = trace.size_class()
+        chunks = (_zip_feeds(feeds, trace, ranges) if feeds is not None
+                  else feed(trace, ranges))
+        seg_iter = iter(trace.segments())
+        seg = next(seg_iter)
+        for (e0, e1), batches in zip(ranges, chunks):
+            ev = slice(e0, e1)
+            pC, velC = run(pC, velC, batches,
+                           jnp.asarray(trace.worker_id[ev]),
+                           lrC[:, ev], facC[:, ev],
+                           jnp.asarray(sc[ev]), momC)
+            while seg is not None and e1 >= seg[1]:
+                fire(seg[2])
+                seg = next(seg_iter, None)
+        while seg is not None:
+            fire(seg[2])
+            seg = next(seg_iter, None)
+    else:
+        for _, _, fired in trace.segments():
+            fire(fired)
+    return [SimResult(sim_time=traces[i].sim_time, history=histories[i],
+                      params=spec.unravel_jit(pC[i]),
+                      n_pushes=traces[i].n_pushes)
+            for i in range(n_cand)]
 
 
 def _chunk_ranges(trace: SimTrace, scan_chunk: int):

@@ -111,6 +111,14 @@ class FlatSpec:
         row block per simulated worker (fresh workers, zero velocity)."""
         return jnp.zeros((int(n),) + self.shape, jnp.float32)
 
+    def zeros_candidates(self, n_candidates: int, n_workers: int):
+        """Zero ``(n_candidates, n_workers, rows, LANE)`` buffer — the
+        batched candidate replay's velocity state: one stacked per-worker
+        block per autotuner candidate, so ``jax.vmap`` over the leading
+        axis runs every candidate's simulated cluster in one executable."""
+        return jnp.zeros((int(n_candidates), int(n_workers)) + self.shape,
+                         jnp.float32)
+
     def ravel_stacked(self, trees):
         """Per-worker pytrees -> ``(len(trees), rows, LANE)`` stack."""
         return jnp.stack([self.ravel(t) for t in trees])

@@ -6,6 +6,7 @@ size's memory-maximal large batch B_L(size), producing per-sub-stage
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Optional, Sequence, Tuple
 
@@ -20,18 +21,19 @@ class HybridPhase:
     dbl: DualBatchPlan
 
 
-def hybrid_schedule(tm: LinearTimeModel, *, stages: Sequence[int],
-                    stage_lrs: Sequence[float], sub_sizes: Sequence[int],
-                    sub_dropouts: Sequence[float], B_L_ref: int,
-                    dataset_size: int, n_workers: int, n_small: int,
-                    k: float, factor: str = "ds_over_dl",
-                    axis: str = "resolution") -> Tuple[HybridPhase, ...]:
+def _hybrid_schedule(tm: LinearTimeModel, *, stages: Sequence[int],
+                     stage_lrs: Sequence[float], sub_sizes: Sequence[int],
+                     sub_dropouts: Sequence[float], B_L_ref: int,
+                     dataset_size: int, n_workers: int, n_small: int,
+                     k: float, factor: str = "ds_over_dl",
+                     axis: str = "resolution") -> Tuple[HybridPhase, ...]:
     """Compose CPL and DBL.  B_L_ref is the memory-maximal large batch at the
     LARGEST input size; smaller sub-stage inputs scale it up (paper Table 6:
     B_L = (2330, 1110, 740) for ImageNet resolutions (160, 224, 288)).
 
-    The time model is rescaled per sub-stage: per-sample cost a scales with
-    the input cost (r^2 or s), overhead b is size-independent.
+    The time model is rescaled per sub-stage via ``LinearTimeModel.scaled``:
+    per-sample cost a scales with the input cost (r^2 or s), overhead b is
+    size-independent.
     """
     cpl = cyclic_schedule(stages=stages, stage_lrs=stage_lrs,
                           sub_sizes=sub_sizes, sub_dropouts=sub_dropouts,
@@ -39,15 +41,34 @@ def hybrid_schedule(tm: LinearTimeModel, *, stages: Sequence[int],
     ref = max(sub_sizes)
     phases = []
     for sub in cpl:
-        scale = ((sub.input_size / ref) ** 2 if axis == "resolution"
-                 else sub.input_size / ref)
-        tm_sub = LinearTimeModel(a=tm.a * scale, b=tm.b)
+        tm_sub = tm.scaled(sub.input_size, ref, axis=axis)
         B_L = adapt_batch(B_L_ref, ref, sub.input_size, axis=axis)
         dbl = solve_plan(tm_sub, B_L=B_L, d=dataset_size,
                          n_workers=n_workers, n_small=n_small, k=k,
                          factor=factor)
         phases.append(HybridPhase(sub=sub, dbl=dbl))
     return tuple(phases)
+
+
+def hybrid_schedule(tm: LinearTimeModel, *, stages: Sequence[int],
+                    stage_lrs: Sequence[float], sub_sizes: Sequence[int],
+                    sub_dropouts: Sequence[float], B_L_ref: int,
+                    dataset_size: int, n_workers: int, n_small: int,
+                    k: float, factor: str = "ds_over_dl",
+                    axis: str = "resolution") -> Tuple[HybridPhase, ...]:
+    """Deprecated constructor shim — declare the schedule as a
+    ``repro.api.ScheduleSpec(scheme="hybrid", ...)`` and call
+    ``spec.to_phases()`` instead (specs serialize, replay and autotune;
+    hand-built HybridPhase tuples do not)."""
+    warnings.warn(
+        "hybrid_schedule is deprecated; build a repro.api.ScheduleSpec("
+        "scheme='hybrid', ...) and use spec.to_phases()",
+        DeprecationWarning, stacklevel=2)
+    return _hybrid_schedule(tm, stages=stages, stage_lrs=stage_lrs,
+                            sub_sizes=sub_sizes, sub_dropouts=sub_dropouts,
+                            B_L_ref=B_L_ref, dataset_size=dataset_size,
+                            n_workers=n_workers, n_small=n_small, k=k,
+                            factor=factor, axis=axis)
 
 
 def predicted_total_time(phases: Sequence[HybridPhase],
@@ -59,8 +80,6 @@ def predicted_total_time(phases: Sequence[HybridPhase],
         ref_size = max(p.sub.input_size for p in phases)
     total = 0.0
     for p in phases:
-        scale = ((p.sub.input_size / ref_size) ** 2 if axis == "resolution"
-                 else p.sub.input_size / ref_size)
-        tm_sub = LinearTimeModel(a=tm.a * scale, b=tm.b)
+        tm_sub = tm.scaled(p.sub.input_size, ref_size, axis=axis)
         total += p.sub.epochs * p.dbl.predicted_epoch_time(tm_sub)
     return total

@@ -41,6 +41,18 @@ class LinearTimeModel:
         """Eq. 3: t ≈ (a + b/x) · d."""
         return (self.a + self.b / x) * d
 
+    def scaled(self, input_size: float, ref_size: float, *,
+               axis: str = "resolution") -> "LinearTimeModel":
+        """The model rescaled to another input size: per-sample cost a
+        scales with the input cost ratio (r² on images, s on sequences);
+        the per-batch overhead b is size-independent (paper §4.2).  This
+        is THE size-rescaling rule — the cluster backends, the hybrid
+        scheduler and the autotuner's analytic pruning all route through
+        it so a schedule is costed identically everywhere."""
+        scale = ((input_size / ref_size) ** 2 if axis == "resolution"
+                 else input_size / ref_size)
+        return LinearTimeModel(a=self.a * scale, b=self.b)
+
     @staticmethod
     def fit(batch_sizes: Sequence[float],
             batch_times: Sequence[float]) -> "LinearTimeModel":

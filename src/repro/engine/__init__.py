@@ -1,13 +1,15 @@
 """Unified phase-scheduled training engine.
 
-    Phase / single_phase / phases_from_hybrid   — schedule construction
+    Phase / single_phase                        — the engine's unit of work
     TrainEngine                                 — compiled-step cache + run loop
     run_sim                                     — same schedule on the PS sim
     check_parity                                — PS-sim ↔ SPMD invariant
 
-The three paper schemes are phase lists (baseline: one unweighted phase;
-dbl: one phase with a solved layout; hybrid: ``hybrid_schedule`` mapped via
-``phases_from_hybrid``), all driven by the same engine.  Both execution
+The three paper schemes are phase lists lowered from ONE declarative
+``repro.api.ScheduleSpec`` via ``spec.to_phases()`` (baseline: one
+unweighted phase; dbl: one phase with a solved layout; hybrid: one phase
+per CPL sub-stage; ``phases_from_hybrid`` survives as a deprecation
+shim), all driven by the same engine.  Both execution
 paths — the PS simulator and the SPMD engine — implement the
 ``repro.cluster.Backend`` protocol; ``run_sim`` is the sim front-end and
 ``SpmdBackend`` wraps ``TrainEngine`` for the compiled path.

@@ -12,6 +12,7 @@ schemes reduce to phase lists:
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Callable, Optional, Sequence, Tuple
 
@@ -53,10 +54,10 @@ def single_phase(*, input_size: int, n_steps: int, lr: float,
                   lr_for_epoch=lr_for_epoch),)
 
 
-def phases_from_hybrid(hybrid_phases: Sequence[HybridPhase], *,
-                       total_steps: int, global_batch: int,
-                       axis: str = "seq_len", micro_steps: int = 0
-                       ) -> Tuple[Phase, ...]:
+def _phases_from_hybrid(hybrid_phases: Sequence[HybridPhase], *,
+                        total_steps: int, global_batch: int,
+                        axis: str = "seq_len", micro_steps: int = 0
+                        ) -> Tuple[Phase, ...]:
     """Map ``hybrid_schedule`` output 1:1 onto engine phases.
 
     Steps are split across sub-stages in proportion to their epoch counts;
@@ -94,3 +95,20 @@ def phases_from_hybrid(hybrid_phases: Sequence[HybridPhase], *,
                          epochs=hp.sub.epochs, plan=hp.dbl, layout=layout,
                          micro_steps=micro_steps))
     return tuple(p for p in out if p.n_steps > 0 or p.epochs > 0)
+
+
+def phases_from_hybrid(hybrid_phases: Sequence[HybridPhase], *,
+                       total_steps: int, global_batch: int,
+                       axis: str = "seq_len", micro_steps: int = 0
+                       ) -> Tuple[Phase, ...]:
+    """Deprecated constructor shim — declare the schedule as a
+    ``repro.api.ScheduleSpec(scheme="hybrid", n_steps=..., ...)`` and call
+    ``spec.to_phases()`` instead (one declarative, serializable spec
+    replaces the hybrid_schedule -> phases_from_hybrid two-step)."""
+    warnings.warn(
+        "phases_from_hybrid is deprecated; build a repro.api.ScheduleSpec("
+        "scheme='hybrid', n_steps=..., ...) and use spec.to_phases()",
+        DeprecationWarning, stacklevel=2)
+    return _phases_from_hybrid(hybrid_phases, total_steps=total_steps,
+                               global_batch=global_batch, axis=axis,
+                               micro_steps=micro_steps)

@@ -254,6 +254,44 @@ def dbl_apply_worker_flat2d(p2, g2, vel3, wid, lr, factor,
         *scalars, p2, g2, vel3)
 
 
+def dbl_apply_worker_xla(p2, g2, vel3, wid, lr, factor, momentum):
+    """XLA-elementwise form of ``dbl_apply_worker_flat2d`` — the same
+    per-event PS update as a handful of fused elementwise ops instead of a
+    ``pallas_call``:
+
+        v'[wid] = m·v[wid] + g;   d = −lr·v'[wid];   w' = w + f·d
+
+    The float op order is identical to the kernel's and to the event
+    path's jitted ``local_update``, so all three forms are bit-equal on
+    f32 buffers; the barrier pins the gradient the way the opaque kernel
+    call does, keeping XLA from folding the update math into the backward
+    epilogue (the bit-moving fusion the parity contract forbids).
+
+    This form is also what the **batched candidate replay** vmaps: every
+    op here maps cleanly over a leading candidate axis (params
+    ``(C, rows, LANE)``, velocity ``(C, n_workers, rows, LANE)``), whereas
+    vmapping an interpret-mode ``pallas_call`` would just multiply
+    emulation overhead.  Returns ``(params, velocity)`` like the kernel.
+
+    ``optimization_barrier`` has no vmap batching rule, so under the
+    candidate-batched replay the barrier drops out — harmless there: the
+    batched executable IS one fusion scope per event for every candidate,
+    so all candidates see the same (reassociation-free elementwise)
+    schedule and the batched-vs-sequential f32 parity contract is upheld
+    by the op order alone.
+    """
+    try:
+        g2 = jax.lax.optimization_barrier(g2)
+    except NotImplementedError:      # vmapped (batched candidate replay)
+        pass
+    vrow = jax.lax.dynamic_slice_in_dim(vel3, wid, 1, 0)[0]
+    v = momentum * vrow + g2
+    d = -lr * v
+    p2 = p2 + factor * d
+    vel3 = jax.lax.dynamic_update_slice_in_dim(vel3, v[None], wid, 0)
+    return p2, vel3
+
+
 def dbl_merge_flat(p, g_large, g_small, *, factor: float, lr: float,
                    block_rows: int = BLOCK_ROWS, interpret: bool = False):
     """p, g_large, g_small: flat (N,) arrays -> updated flat params.

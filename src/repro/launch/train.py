@@ -3,8 +3,10 @@
 Runs the paper's three schemes on real (synthetic) data:
   --scheme baseline   single (large) batch size
   --scheme dbl        dual-batch learning (weighted SPMD step)
-  --scheme hybrid     dual-batch x cyclic progressive (seq-len scheduled,
-                      phases from core.hybrid.hybrid_schedule)
+  --scheme hybrid     dual-batch x cyclic progressive (seq-len scheduled)
+
+Each scheme is ONE declarative ``repro.api.ScheduleSpec`` (``build_spec``)
+executed by ``repro.api.run`` on the SPMD backend.
 
 With ``--optimizer sgd`` the dual-batch parameter update takes the fused
 Pallas ``dbl_merge`` server-update hot path (paper §3.4); pass
@@ -30,39 +32,39 @@ import json
 import jax
 
 from repro import models
+from repro.api import RunConfig, ScheduleSpec
+from repro.api import run as api_run
 from repro.configs import ARCH_IDS, get_config, reduced
-from repro.core import LinearTimeModel, hybrid_schedule, solve_plan
 from repro.data import DataPlane, SyntheticTokens
-from repro.engine import (SpmdBackend, TrainEngine, phases_from_hybrid,
-                          single_phase)
+from repro.engine import TrainEngine
 from repro.optim import make_optimizer
 
 
-def build_phases(args):
-    """Phase schedule for the requested scheme (the ONLY scheme-specific
-    branch — everything downstream is the engine)."""
-    tm = LinearTimeModel(a=1.0, b=24.6)   # shape-relative; only ratios matter
-    d = args.global_batch * 64
+def build_spec(args) -> ScheduleSpec:
+    """The CLI's scheme as ONE declarative ``ScheduleSpec`` (the only
+    scheme-specific branch — everything downstream is ``repro.api.run``).
+    The time model is shape-relative (a=1, b=24.6): only its ratios reach
+    the dual-batch solver."""
+    spec = ScheduleSpec(
+        scheme=args.scheme, input_size=args.seq, axis="seq_len",
+        batch_size=args.global_batch, dataset_size=args.global_batch * 64,
+        n_workers=4, n_small=args.n_small, k=args.k, n_steps=args.steps,
+        lr=args.lr, micro_steps=args.micro_steps, tm_a=1.0, tm_b=24.6,
+        seed=args.seed)
     if args.scheme == "hybrid":
         # CPL sub-stages low -> high seq (paper's 2-sub-stage split), the
         # dual-batch plan re-solved per sub-stage at its memory-maximal B_L
         sub_sizes = (max(16, args.seq // 2), args.seq)
-        hp = hybrid_schedule(
-            tm, stages=(len(sub_sizes),), stage_lrs=(args.lr,),
-            sub_sizes=sub_sizes, sub_dropouts=(0.0,) * len(sub_sizes),
-            B_L_ref=args.global_batch, dataset_size=d, n_workers=4,
-            n_small=args.n_small, k=args.k, axis="seq_len")
-        return phases_from_hybrid(hp, total_steps=args.steps,
-                                  global_batch=args.global_batch,
-                                  axis="seq_len",
-                                  micro_steps=args.micro_steps)
-    plan = None
-    if args.scheme == "dbl":
-        plan = solve_plan(tm, B_L=args.global_batch, d=d, n_workers=4,
-                          n_small=args.n_small, k=args.k)
-    return single_phase(input_size=args.seq, n_steps=args.steps, lr=args.lr,
-                        batch_size=args.global_batch, plan=plan,
-                        micro_steps=args.micro_steps)
+        spec = spec.replace(sub_sizes=sub_sizes,
+                            sub_dropouts=(0.0,) * len(sub_sizes),
+                            stage_epochs=(len(sub_sizes),),
+                            stage_lrs=(args.lr,))
+    return spec
+
+
+def build_phases(args):
+    """Legacy view: the spec's lowered Phase list."""
+    return build_spec(args).to_phases()
 
 
 def run(argv=None):
@@ -118,7 +120,8 @@ def run(argv=None):
                            n_examples=max(4096, args.global_batch * 64))
     params = models.init_params(cfg, jax.random.PRNGKey(args.seed))
 
-    phases = build_phases(args)
+    spec = build_spec(args)
+    phases = spec.to_phases()
     # plain-SGD dual-batch -> the paper §3.4 server update (fused dbl_merge
     # hot path).  That update has no momentum/weight-decay state, so the
     # optimizer is built to match — otherwise the CLI would silently claim
@@ -154,15 +157,17 @@ def run(argv=None):
     # step) streams (stateless in gstep, so a phase-boundary resume
     # replays the uninterrupted run's stream exactly), host-side seq-len
     # cropping, double-buffered scan staging and warm-compile structs
-    plane = DataPlane(data, seed=args.seed, prefetch=args.prefetch)
+    plane = DataPlane(data, seed=spec.seed, prefetch=args.prefetch)
 
     def log_fn(rec):
         print(json.dumps(_to_cli_rec(rec)))
 
-    backend = SpmdBackend(engine, plane)
-    res = backend.run(phases, params, opt_state=opt_state, seed=args.seed,
-                      ckpt_dir=args.ckpt or None, resume=args.resume,
-                      log_fn=log_fn)
+    res = api_run(spec,
+                  RunConfig(backend="spmd", prefetch=args.prefetch,
+                            ckpt_dir=args.ckpt or None, resume=args.resume,
+                            log_fn=log_fn),
+                  init_params=params, opt_state=opt_state, engine=engine,
+                  plane=plane)
     history = [_to_cli_rec(r) for r in res.history]
     if res.resumed_from is not None:
         print(f"# resumed from phase boundary {res.resumed_from}")

@@ -1,0 +1,358 @@
+"""Schedule autotuner + ScheduleSpec API: serialization bit-stability,
+spec -> Phase equivalence against the legacy constructors (Table 3/5/8
+settings), noise-aware Pareto dominance, deterministic searches, and the
+batched candidate replay's bit-identity to sequential trace replay."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import RunConfig, ScheduleSpec
+from repro.cluster.trace import (execute_trace, execute_trace_batched,
+                                 trace_signature)
+from repro.core.dual_batch import solve_plan
+from repro.core.hybrid import hybrid_schedule
+from repro.core.time_model import LinearTimeModel
+from repro.engine.phases import phases_from_hybrid, single_phase
+from repro.optim import staged_lr
+from repro.tune import (Candidate, TuneProblem, autotune, base_spec,
+                        combined_space, dominates, pareto_front,
+                        predicted_schedule_time, schedule_cost,
+                        table3_space, table5_space, table8_space,
+                        union_candidates)
+from repro.tune.autotune import _single_phase_trace
+
+TM = LinearTimeModel(a=0.001, b=0.0246)
+
+
+# ------------------------- spec serialization -------------------------------
+def _sample_specs():
+    return [
+        base_spec(),
+        base_spec(epochs=6, n_small=0),
+        base_spec(seed=7).replace(k=1.1, factor="sqrt"),
+        base_spec(epochs=16).replace(scheme="hybrid", sub_sizes=(24, 32),
+                                     sub_dropouts=(0.0, 0.1),
+                                     lr_stage_epochs=(), lr_stage_lrs=()),
+        ScheduleSpec(scheme="dbl", input_size=8, axis="seq_len",
+                     batch_size=16, dataset_size=512, n_workers=4,
+                     n_small=3, n_steps=100, lr=0.3, micro_steps=2,
+                     tm_a=1.0, tm_b=24.57, seed=3),
+    ]
+
+
+def test_spec_json_roundtrip_bit_stable():
+    for spec in _sample_specs():
+        s = spec.to_json()
+        back = ScheduleSpec.from_json(s)
+        assert back == spec                  # value roundtrip (incl. floats)
+        assert back.to_json() == s           # canonical form is a fixpoint
+        assert back.run_key() == spec.run_key()
+
+
+def test_spec_json_rejects_unknown_fields():
+    with pytest.raises(ValueError, match="unknown ScheduleSpec fields"):
+        ScheduleSpec.from_json('{"scheme": "dbl", "warp_speed": 9}')
+
+
+def test_run_key_distinguishes_specs():
+    keys = {s.run_key() for s in _sample_specs()}
+    assert len(keys) == len(_sample_specs())
+    # the seed is part of the identity: same settings, new seed, new key
+    assert base_spec(seed=0).run_key() != base_spec(seed=1).run_key()
+
+
+# --------------------- spec -> Phase vs legacy constructors -----------------
+@pytest.mark.parametrize("n_small,k,factor", [
+    (3, 1.1, "ds_over_dl"),     # Table 3 pinned point
+    (3, 1.1, "sqrt"),           # Table 3 factor axis
+    (3, 1.1, "none"),
+    (0, 1.05, "ds_over_dl"),    # Table 5 baseline end
+    (2, 1.05, "ds_over_dl"),    # Table 5 sweep point
+])
+def test_dbl_spec_matches_legacy_single_phase(n_small, k, factor):
+    epochs = 6
+    spec = base_spec(epochs=epochs, n_small=n_small, k=k, factor=factor)
+    if n_small == 0:
+        spec = spec.replace(scheme="baseline")
+    (ph,) = spec.to_phases()
+    plan = solve_plan(TM, B_L=64, d=2048, n_workers=4, n_small=n_small,
+                      k=k if n_small else 1.0, factor=factor)
+    (legacy,) = single_phase(
+        input_size=32, n_steps=0, lr=0.05, batch_size=64, plan=plan,
+        epochs=epochs,
+        lr_for_epoch=staged_lr([epochs * 3 // 4, epochs], [0.05, 0.01]))
+    assert ph.plan == legacy.plan
+    for f in ("input_size", "n_steps", "lr", "batch_size", "dropout",
+              "epochs", "micro_steps"):
+        assert getattr(ph, f) == getattr(legacy, f), f
+    # the staged-LR schedule matches value-for-value over the epoch budget
+    assert [ph.lr_for_epoch(e) for e in range(epochs)] \
+        == [legacy.lr_for_epoch(e) for e in range(epochs)]
+
+
+def test_dbl_spec_step_mode_matches_legacy_exactly():
+    """SPMD step mode lowers through the same single_phase helper the
+    legacy launch path used — tuple equality, layout included."""
+    spec = base_spec(n_small=3).replace(n_steps=40, epochs=0,
+                                        lr_stage_epochs=(),
+                                        lr_stage_lrs=())
+    plan = solve_plan(TM, B_L=64, d=2048, n_workers=4, n_small=3, k=1.05)
+    assert spec.to_phases() == single_phase(
+        input_size=32, n_steps=40, lr=0.05, batch_size=64, plan=plan)
+
+
+def test_hybrid_spec_matches_legacy_hybrid_schedule():
+    """Table 8 setting: the spec's lowered phases map 1:1 onto the
+    deprecated ``hybrid_schedule`` output (which must warn)."""
+    epochs = 16
+    spec = base_spec(epochs=epochs).replace(
+        scheme="hybrid", sub_sizes=(24, 32),
+        lr_stage_epochs=(), lr_stage_lrs=())
+    with pytest.warns(DeprecationWarning, match="hybrid_schedule"):
+        hp = hybrid_schedule(
+            TM, stages=(epochs // 2, epochs // 2), stage_lrs=(0.05, 0.01),
+            sub_sizes=(24, 32), sub_dropouts=(0.0, 0.0), B_L_ref=64,
+            dataset_size=2048, n_workers=4, n_small=3, k=1.05,
+            axis="resolution")
+    phases = spec.to_phases()
+    assert len(phases) == len(hp)
+    for ph, h in zip(phases, hp):
+        assert ph.plan == h.dbl
+        assert ph.input_size == h.sub.input_size
+        assert ph.lr == h.sub.lr
+        assert ph.epochs == h.sub.epochs
+        assert ph.dropout == h.sub.dropout
+        assert ph.batch_size == h.dbl.B_L
+
+    # step mode goes through the same lowering phases_from_hybrid wraps
+    with pytest.warns(DeprecationWarning, match="phases_from_hybrid"):
+        legacy = phases_from_hybrid(hp, total_steps=64, global_batch=64,
+                                    axis="resolution")
+    assert spec.replace(n_steps=64).to_phases() == legacy
+
+
+def test_hybrid_spec_validates_ladder_top_rung():
+    spec = base_spec().replace(scheme="hybrid", sub_sizes=(24, 28))
+    with pytest.raises(ValueError, match="largest CPL sub size"):
+        spec.to_phases()
+
+
+# ------------------------- analytic stage + Pareto --------------------------
+def test_schedule_cost_flat_vs_ladder():
+    flat = base_spec(epochs=8)
+    assert schedule_cost(flat) == pytest.approx(8.0)   # E full-size epochs
+    ladder = base_spec(epochs=8).replace(scheme="hybrid",
+                                         sub_sizes=(24, 32),
+                                         lr_stage_epochs=(),
+                                         lr_stage_lrs=())
+    assert schedule_cost(ladder) < schedule_cost(flat)
+    assert predicted_schedule_time(ladder) < predicted_schedule_time(flat)
+
+
+def test_dominates_is_noise_aware():
+    a, b = (1.0, 1.0, 0.9), (2.0, 2.0, 0.5)
+    assert dominates(a, b)
+    assert not dominates(b, a)
+    # inside the noise floor on every objective -> a tie, both directions
+    close = (1.01, 1.0, 0.91)
+    assert not dominates(a, close) and not dominates(close, a)
+    # worse on any single objective kills dominance
+    assert not dominates((0.5, 3.0, 0.9), b)
+
+
+def _cand(label, t, c, a):
+    cd = Candidate(label=label, spec=base_spec(), predicted_time=t, cost=c)
+    cd.sim_time, cd.accuracy = t, a
+    return cd
+
+
+def test_pareto_front_drops_dominated_and_unvalidated():
+    cands = [_cand("good", 1.0, 1.0, 0.9),
+             _cand("dominated", 2.0, 2.0, 0.5),
+             _cand("fast-cheap-bad", 0.4, 0.4, 0.5),
+             Candidate(label="unvalidated", spec=base_spec())]
+    front = pareto_front(cands)
+    assert [cands[i].label for i in front] == ["good", "fast-cheap-bad"]
+
+
+def test_autotune_analytic_stage_deterministic():
+    """validate=False: pure spec arithmetic — same space, same pricing,
+    same pruning, same run_key, and the k=1.5 decoy is pruned."""
+    space = combined_space(epochs=6)
+    r1 = autotune(space, problem=None, validate=False, budget_ratio=1.5)
+    r2 = autotune(space, problem=None, validate=False, budget_ratio=1.5)
+    assert r1.run_key() == r2.run_key()
+    assert [c.label for c in r1.candidates] \
+        == [c.label for c in r2.candidates]
+    assert [(c.predicted_time, c.cost, c.pruned) for c in r1.candidates] \
+        == [(c.predicted_time, c.cost, c.pruned) for c in r2.candidates]
+    pruned = {c.label for c in r1.candidates if c.pruned}
+    assert "k1.5" in pruned
+    assert "base" not in pruned
+    assert not any(c.validated for c in r1.candidates)
+    assert r1.front == []
+
+
+def test_union_candidates_dedups_table_grids():
+    base = base_spec(epochs=6)
+    spaces = (table3_space(base=base), table5_space(base=base),
+              table8_space(base=base))
+    union = union_candidates(*spaces)
+    specs = [s for _, s in union]
+    assert len(specs) == len(set(specs))            # dedup by spec
+    for sp in spaces:                               # every grid point kept
+        for _, spec in sp.candidates():
+            assert spec in specs
+
+
+# ------------------- traced validation: tiny linear problem -----------------
+VOCAB, NCLS, N_TRAIN, SEQ = 16, 4, 128, 8
+
+
+def _lin_problem():
+    """Bigram softmax regression over SyntheticTokens (labels are
+    per-position next tokens) — elementwise + matmul only, so traced
+    chunks compile in milliseconds and the vmapped batched replay shares
+    the sequential path's float op order."""
+    from repro.data import DataPlane, SyntheticTokens
+
+    inits, planes, fns = {}, {}, {}
+
+    def _source(seed):
+        return SyntheticTokens(vocab=VOCAB, num_classes=NCLS, seed=seed,
+                               n_examples=N_TRAIN)
+
+    def init_for(seed):
+        if seed not in inits:
+            key = jax.random.PRNGKey(seed)
+            inits[seed] = {"w": 0.01 * jax.random.normal(
+                key, (VOCAB, VOCAB), jnp.float32)}
+        return inits[seed]
+
+    def plane_for(seed):
+        if seed not in planes:
+            planes[seed] = DataPlane(_source(seed), seed=seed)
+        return planes[seed]
+
+    def fns_for(seed, size):
+        if (seed, size) not in fns:
+            src = _source(seed)
+
+            def loss(p, b):
+                oh = jax.nn.one_hot(b["tokens"], VOCAB)       # (B, s, V)
+                logp = jax.nn.log_softmax(oh @ p["w"])
+                return -jnp.take_along_axis(
+                    logp, b["labels"][..., None], axis=-1).mean()
+
+            grad_fn = jax.jit(jax.grad(loss))
+
+            def data_fn(rng, wid, bsz):
+                idx = rng.integers(0, N_TRAIN, size=bsz)
+                return {k: jnp.asarray(v)
+                        for k, v in src.batch_at(idx, size).items()}
+
+            test = {k: jnp.asarray(v) for k, v in
+                    src.batch_at(np.arange(N_TRAIN, N_TRAIN + 64),
+                                 size).items()}
+
+            def eval_fn(p):
+                logits = jax.nn.one_hot(test["tokens"], VOCAB) @ p["w"]
+                acc = float((logits.argmax(-1) == test["labels"]).mean())
+                return {"test_loss": float(loss(p, test)), "test_acc": acc}
+
+            fns[(seed, size)] = (grad_fn, data_fn, eval_fn)
+        return fns[(seed, size)]
+
+    return TuneProblem(init_for=init_for, fns_for=fns_for,
+                       plane_for=plane_for)
+
+
+def _lin_spec(seed=0, **overrides):
+    spec = ScheduleSpec(
+        scheme="dbl", input_size=SEQ, axis="seq_len", batch_size=16,
+        dataset_size=N_TRAIN, n_workers=4, n_small=3, k=1.05, epochs=2,
+        lr=0.5, tm_a=0.001, tm_b=0.0246, sync="asp", seed=seed)
+    return spec.replace(**overrides) if overrides else spec
+
+
+def _lin_candidates():
+    return [("base", _lin_spec()),
+            ("f_sqrt", _lin_spec(factor="sqrt")),
+            ("f_none", _lin_spec(factor="none")),
+            ("decoy", _lin_spec(k=2.0))]   # predicted ~1.87x the base
+
+
+def test_autotune_search_deterministic_and_batched():
+    problem = _lin_problem()
+    config = RunConfig(trace_chunk=8)
+
+    def search():
+        return autotune(_lin_candidates(), problem, config=config,
+                        budget_ratio=1.5)
+
+    r1, r2 = search(), search()
+    by_label = {c.label: c for c in r1.candidates}
+    assert by_label["decoy"].pruned            # analytic filter, no device
+    assert not by_label["decoy"].validated
+    # the factor ablation shares one timeline -> one batched executable
+    for lb in ("base", "f_sqrt", "f_none"):
+        assert by_label[lb].replay == "batched:3"
+        assert by_label[lb].validated
+        # one shared timeline -> one shared simulated clock
+        assert by_label[lb].sim_time == by_label["base"].sim_time > 0
+    # deterministic: bit-equal metrics and the same front, twice
+    assert [(c.sim_time, c.accuracy, c.test_loss)
+            for c in r1.candidates] \
+        == [(c.sim_time, c.accuracy, c.test_loss) for c in r2.candidates]
+    assert r1.front == r2.front and r1.front
+    assert r1.run_key() == r2.run_key()
+    # the artifact serializes the whole search
+    blob = r1.to_json()
+    assert by_label["base"].spec.run_key() != r1.run_key()
+    assert '"front"' in blob and '"candidates"' in blob
+
+
+def test_batched_replay_bit_identical_to_sequential():
+    """f32 bit-identity: each candidate's batched-replay params equal its
+    own sequential ``execute_trace`` params exactly (same float op order
+    under vmap — the correctness contract of the batched executable)."""
+    problem = _lin_problem()
+    group = [c for _, c in
+             ((lb, Candidate(label=lb, spec=sp))
+              for lb, sp in _lin_candidates()[:3])]
+    traces = [_single_phase_trace(c) for c in group]
+    sig0 = trace_signature(traces[0])
+    assert all(trace_signature(t) == sig0 for t in traces[1:])
+    phase = group[0].spec.to_phases()[0]
+    grad_fn, _, _ = problem.fns_for(0, SEQ)
+    inits = [problem.init_for(c.spec.seed) for c in group]
+    plane = problem.plane_for(0)
+
+    seq = [execute_trace(p0, grad_fn, tr,
+                         feed=plane.trace_feed(0, phase), scan_chunk=8)
+           for p0, tr in zip(inits, traces)]
+    bat = execute_trace_batched(inits, grad_fn, traces,
+                                feed=plane.trace_feed(0, phase),
+                                scan_chunk=8)
+    assert len(seq) == len(bat) == 3
+    for s, b in zip(seq, bat):
+        assert s.sim_time == b.sim_time
+        assert s.n_pushes == b.n_pushes
+        s_leaves = jax.tree_util.tree_leaves(s.params)
+        b_leaves = jax.tree_util.tree_leaves(b.params)
+        for sl, bl in zip(s_leaves, b_leaves):
+            assert sl.dtype == jnp.float32
+            np.testing.assert_array_equal(np.asarray(sl), np.asarray(bl))
+
+
+def test_batched_replay_rejects_mixed_signatures():
+    problem = _lin_problem()
+    c_base = Candidate(label="base", spec=_lin_spec())
+    c_k = Candidate(label="k1.5", spec=_lin_spec(k=1.5))  # other timeline
+    tr_a, tr_b = _single_phase_trace(c_base), _single_phase_trace(c_k)
+    assert trace_signature(tr_a) != trace_signature(tr_b)
+    with pytest.raises(ValueError, match="different signature"):
+        execute_trace_batched([problem.init_for(0)] * 2,
+                              problem.fns_for(0, SEQ)[0], [tr_a, tr_b],
+                              data_fn=problem.fns_for(0, SEQ)[1])
