@@ -34,7 +34,20 @@ baseline moved):
   * ``ps_sim/trace_warm_us <= ps_sim/warm_call_us`` and
     ``<= ps_sim/sweep_warm_us * (1 + --step-tol)`` — the trace-compiled
     PS simulator must not lose to the per-event dispatch loop, neither
-    against the gated table-workload row nor on its own sweep workload.
+    against the gated table-workload row nor on its own sweep workload;
+  * ``autotune/batched_candidate_us <= autotune/seq_candidate_us`` —
+    hard: one vmapped executable over C stacked candidates must beat C
+    sequential replays of the same chunks;
+  * ``flat/bf16_bytes <= flat/f32_bytes * 0.55`` — hard: the bf16 flat
+    store must (near-)halve the f32 parameter buffer's bytes, padding
+    included — any padding-rule change that erodes the halving fails;
+  * ``engine/step_fused_bf16_us <= engine/step_fused_us *
+    (1 + --step-tol)`` — the mixed bf16-store fused step (bf16 shadow +
+    fused f32 master update) must not cost materially more than the f32
+    fused step; its payoff is halved parameter HBM, not speed, so it may
+    not regress the hot loop.
+Every gate is evaluated on every run and ALL violations are reported
+before the non-zero exit — one CI run surfaces every broken invariant.
 Run them alone (hard CI step) with ``--directional-only``; the baseline
 comparison above stays informative on shared runners.
 """
@@ -50,95 +63,77 @@ import sys
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
+def _gates(step_tol: float) -> list:
+    """Declarative directional gate table.  Each entry is
+    ``(lhs_row, op, rhs, scale, why)``: the gate asserts
+    ``rows[lhs_row] op rows[rhs] * scale`` (or ``op const * scale`` when
+    ``rhs`` is a number).  ``scale == 1 + step_tol`` marks the
+    shared-runner noise band; ``scale`` of exactly 1.0 (or a bare ratio
+    like the 0.55 bytes bound) is a hard gate."""
+    noise = 1.0 + step_tol
+    return [
+        ("engine/dbl_merge_speedup", ">=", 1.0, 1.0,
+         "the fused dbl_merge server update lost to the unfused sequence"),
+        ("engine/step_fused_us", "<=", "engine/step_unfused_us", noise,
+         "the scan-compiled fused step lost to the per-step unfused "
+         "fallback"),
+        # noise band, not exact order: on a loaded 2-vCPU runner the
+        # background compile timeshares with the foreground phase
+        ("engine/phase_transition_warm_us", "<=",
+         "engine/phase_transition_cold_us", noise,
+         "the overlapped warm compile stalled the phase boundary longer "
+         "than the cold recompile it replaces"),
+        ("ps_sim/trace_warm_us", "<=", "ps_sim/warm_call_us", 1.0,
+         "the trace-compiled simulator lost to the per-event dispatch "
+         "loop"),
+        ("ps_sim/trace_warm_us", "<=", "ps_sim/sweep_warm_us", noise,
+         "the trace-compiled path lost to the event loop on the same "
+         "sweep workload"),
+        # hard, no tolerance: per-candidate dispatch + feed staging
+        # amortize across the batch, so parity means the batching bought
+        # nothing
+        ("autotune/batched_candidate_us", "<=",
+         "autotune/seq_candidate_us", 1.0,
+         "batched candidate replay lost to sequential trace replay"),
+        # hard: bf16 halves every payload row; the 0.05 headroom only
+        # covers the sublane-16 vs sublane-8 padding delta on tiny leaves
+        ("flat/bf16_bytes", "<=", "flat/f32_bytes", 0.55,
+         "the bf16 store failed to (near-)halve the f32 store's bytes"),
+        ("engine/step_fused_bf16_us", "<=", "engine/step_fused_us", noise,
+         "the mixed bf16-store fused step costs more than the noise band "
+         "over the f32 fused step"),
+    ]
+
+
 def check_directional(rows: dict, *, step_tol: float = 0.10) -> list:
-    """Baseline-free directional assertions on one run's rows; returns the
-    list of violated assertions (rows absent -> noted, not failed)."""
+    """Baseline-free directional assertions on one run's rows.  EVERY
+    gate in the table is evaluated and every violation returned, so one
+    run reports all broken invariants at once (rows absent -> noted, not
+    failed)."""
     failures = []
-    sp = rows.get("engine/dbl_merge_speedup")
-    if sp is None:
-        print("  directional: engine/dbl_merge_speedup missing (not run)")
-    elif sp < 1.0:
-        failures.append(
-            f"engine/dbl_merge_speedup={sp:.3f} < 1.0 — the fused "
-            "dbl_merge server update lost to the unfused sequence")
-    else:
-        print(f"  directional ok: engine/dbl_merge_speedup={sp:.3f} >= 1.0")
-    f_us = rows.get("engine/step_fused_us")
-    u_us = rows.get("engine/step_unfused_us")
-    if f_us is None or u_us is None:
-        print("  directional: engine/step_{fused,unfused}_us missing "
-              "(not run)")
-    elif f_us > u_us * (1.0 + step_tol):
-        failures.append(
-            f"engine/step_fused_us={f_us:.1f} > "
-            f"{u_us:.1f} * {1 + step_tol:.2f} — the scan-compiled fused "
-            "step lost to the per-step unfused fallback")
-    else:
-        print(f"  directional ok: engine/step_fused_us={f_us:.1f} <= "
-              f"step_unfused_us={u_us:.1f} (+{step_tol * 100:.0f}% tol)")
-    w_us = rows.get("engine/phase_transition_warm_us")
-    c_us = rows.get("engine/phase_transition_cold_us")
-    if w_us is None or c_us is None:
-        print("  directional: engine/phase_transition_{warm,cold}_us "
-              "missing (not run)")
-    elif w_us > c_us * (1.0 + step_tol):
-        # same shared-runner noise tolerance as the step gate: on a loaded
-        # 2-vCPU runner the background compile timeshares with the
-        # foreground phase, so demand a win beyond noise, not exact order
-        failures.append(
-            f"engine/phase_transition_warm_us={w_us:.1f} > "
-            f"cold_us={c_us:.1f} * {1 + step_tol:.2f} — the overlapped "
-            "warm compile stalled the phase boundary longer than the cold "
-            "recompile it replaces")
-    else:
-        print(f"  directional ok: engine/phase_transition_warm_us="
-              f"{w_us:.1f} <= cold_us={c_us:.1f} "
-              f"(+{step_tol * 100:.0f}% tol)")
-    t_us = rows.get("ps_sim/trace_warm_us")
-    wc_us = rows.get("ps_sim/warm_call_us")
-    sw_us = rows.get("ps_sim/sweep_warm_us")
-    if t_us is None or wc_us is None:
-        print("  directional: ps_sim/{trace_warm,warm_call}_us missing "
-              "(not run)")
-    elif t_us > wc_us:
-        failures.append(
-            f"ps_sim/trace_warm_us={t_us:.1f} > warm_call_us={wc_us:.1f} "
-            "— the trace-compiled simulator lost to the per-event "
-            "dispatch loop")
-    else:
-        print(f"  directional ok: ps_sim/trace_warm_us={t_us:.1f} <= "
-              f"warm_call_us={wc_us:.1f}")
-    if t_us is not None and sw_us is not None:
-        # same-workload gate: the trace replay of the sweep sim must not
-        # lose to the event loop running the identical sim (same noise
-        # tolerance as the step gates)
-        if t_us > sw_us * (1.0 + step_tol):
-            failures.append(
-                f"ps_sim/trace_warm_us={t_us:.1f} > "
-                f"sweep_warm_us={sw_us:.1f} * {1 + step_tol:.2f} — the "
-                "trace-compiled path lost to the event loop on the same "
-                "sweep workload")
+    for lhs, op, rhs, scale, why in _gates(step_tol):
+        lv = rows.get(lhs)
+        if isinstance(rhs, str):
+            rv = rows.get(rhs)
+            if lv is None or rv is None:
+                print(f"  directional: {lhs} vs {rhs} missing (not run)")
+                continue
+            bound = rv * scale
+            bound_s = f"{rhs}={rv:.1f}"
+            if scale != 1.0:
+                bound_s += f" * {scale:.2f}"
         else:
-            print(f"  directional ok: ps_sim/trace_warm_us={t_us:.1f} <= "
-                  f"sweep_warm_us={sw_us:.1f} "
-                  f"(+{step_tol * 100:.0f}% tol)")
-    b_us = rows.get("autotune/batched_candidate_us")
-    s_us = rows.get("autotune/seq_candidate_us")
-    if b_us is None or s_us is None:
-        print("  directional: autotune/{batched,seq}_candidate_us missing "
-              "(not run)")
-    elif b_us > s_us:
-        # HARD gate, no tolerance: one vmapped executable over C stacked
-        # candidates must beat C sequential replays of the same chunks —
-        # per-candidate dispatch + feed staging amortize across the batch,
-        # so parity means the batching bought nothing
-        failures.append(
-            f"autotune/batched_candidate_us={b_us:.1f} > "
-            f"seq_candidate_us={s_us:.1f} — batched candidate replay "
-            "lost to sequential trace replay")
-    else:
-        print(f"  directional ok: autotune/batched_candidate_us="
-              f"{b_us:.1f} <= seq_candidate_us={s_us:.1f}")
+            if lv is None:
+                print(f"  directional: {lhs} missing (not run)")
+                continue
+            bound = rhs * scale
+            bound_s = f"{bound:g}"
+        if (lv >= bound) if op == ">=" else (lv <= bound):
+            print(f"  directional ok: {lhs}={lv:.3f} {op} {bound_s}")
+        else:
+            failures.append(
+                f"{lhs}={lv:.3f} {'<' if op == '>=' else '>'} {bound_s} "
+                f"— {why}")
     return failures
 
 

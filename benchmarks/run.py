@@ -67,7 +67,9 @@ def main(argv=None) -> None:
             raise
         for r in rows:
             print(",".join(str(x) for x in r), flush=True)
-        print(f"{name}/bench_wall_s,{time.time() - t0:.1f},", flush=True)
+        # .3f, not .1f: fast benches finish in well under 100ms and the
+        # old format printed a misleading dead-looking 0.0
+        print(f"{name}/bench_wall_s,{time.time() - t0:.3f},", flush=True)
 
 
 if __name__ == "__main__":

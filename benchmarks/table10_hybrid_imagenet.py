@@ -31,10 +31,14 @@ def run(quick: bool = True, seed: int = 0):
         ("table10/time_saving_pct", saving * 100, "paper=34.8%"),
         ("table10/size_ratio", (160 / 288) ** 2, "paper=0.31"),
     ]
-    # paper Table 6 check: B_L per resolution from memory adaptation
-    bls = [p.plan.B_L for p in hybrid.to_phases()[:3]]
-    rows.append(("table10/B_L_per_res", 0,
-                 f"ours={bls} paper=[2330,1110,740]"))
+    # paper Table 6 check: B_L per resolution from memory adaptation —
+    # one row per stage resolution carrying the REAL selected B_L (the
+    # old single ``B_L_per_res`` row hardcoded 0 and buried the values in
+    # the derived column)
+    paper_bl = {160: 2330, 224: 1110, 288: 740}
+    for p in hybrid.to_phases()[:3]:
+        rows.append((f"table10/B_L_at_{p.input_size}", p.plan.B_L,
+                     f"paper={paper_bl.get(p.input_size, '-')}"))
     return rows
 
 

@@ -196,6 +196,13 @@ class RunConfig:
     ``TABLE5_TRACED=1``) into one value handed to ``run``.  ``sync=None``
     defers to the spec's own policy string; passing a ``SyncPolicy``
     object here overrides it (e.g. ``SSP(staleness=5)``).
+
+    ``precision``: ``"f32"`` (default) or ``"bf16"`` — the mixed store
+    (bf16 params + fused f32 master update).  Numerics, not schedule: a
+    bf16 run computes the same schedule within the documented tolerance
+    band, so it lives here rather than on ``ScheduleSpec``.  On ``ps_sim``
+    it requires ``traced=True``; on ``spmd`` the engine's own
+    ``precision`` must match (the engine owns its compiled caches).
     """
     backend: str = "ps_sim"              # ps_sim | spmd
     sync: Any = None                     # None -> spec.sync
@@ -205,6 +212,7 @@ class RunConfig:
     traced: bool = False                 # trace-compiled PS replay
     trace_chunk: int = 32
     trace_update: str = "auto"
+    precision: str = "f32"               # f32 | bf16 (mixed store)
     prefetch: bool = True
     ref_size: Optional[int] = None       # None -> spec.input_size
     events_for_phase: Optional[Callable] = None
@@ -232,6 +240,12 @@ def run(spec: ScheduleSpec, config: Optional[RunConfig] = None, *,
     if config.backend == "spmd":
         if engine is None:
             raise ValueError("spmd backend needs engine=TrainEngine(...)")
+        if getattr(engine, "precision", "f32") != config.precision:
+            raise ValueError(
+                f"config.precision={config.precision!r} but the engine was "
+                f"built with precision={engine.precision!r} — the engine "
+                "owns the compiled caches, so build it at the precision "
+                "the run asks for")
         if plane is None and data is not None:
             from repro.data import DataPlane
             plane = DataPlane(data, seed=spec.seed,
@@ -260,7 +274,7 @@ def run(spec: ScheduleSpec, config: Optional[RunConfig] = None, *,
         ref_size=config.ref_size or spec.input_size, jitter=config.jitter,
         events_for_phase=config.events_for_phase, plane=plane,
         traced=config.traced, trace_chunk=config.trace_chunk,
-        trace_update=config.trace_update)
+        trace_update=config.trace_update, precision=config.precision)
     return backend.run(phases, init_params, seed=spec.seed,
                        ckpt_dir=config.ckpt_dir, resume=config.resume)
 

@@ -8,7 +8,12 @@ Flat-store aware: ``repro.core.flat.FlatParams`` nodes anywhere in the
 tree are expanded through their codec before saving and re-packed on load,
 so checkpoints keep the PUBLIC pytree format — a file written from a flat
 store is bit-for-bit identical to one written from the plain pytree, and
-either restores into either representation.
+either restores into either representation.  This holds for EVERY store
+dtype: a bf16 store's ``to_tree`` reads its float32 master buffer (the
+value of record), so the serialized leaves — and therefore the file
+bytes — are identical to the pytree format regardless of precision, and
+restoring into a bf16 ``FlatParams`` rebuilds both the master and the
+re-rounded bf16 shadow from those f32 values.
 """
 from __future__ import annotations
 
@@ -37,6 +42,10 @@ def _expand_flat(tree, abstract: bool = False):
         if not _is_flat(l):
             return l
         if abstract:
+            # f32 regardless of store dtype: to_tree always unravels the
+            # full-precision value of record (buf on f32 specs, master on
+            # bf16 ones), and unravel's output structure is dtype-fixed
+            # by the spec's leaf dtypes anyway
             return jax.eval_shape(
                 l.spec.unravel, jax.ShapeDtypeStruct(l.spec.shape,
                                                      jnp.float32))

@@ -143,6 +143,10 @@ class PsSimBackend:
     ``trace_chunk`` bounds events per compiled chunk and ``trace_update``
     picks the fused update form (``"auto"``: Pallas kernel on TPU, XLA
     elementwise elsewhere).
+    precision: ``"f32"`` (default, bit-identical to before the knob) or
+    ``"bf16"`` — the trace executor carries the bf16 store + f32 master
+    pair per phase (requires ``traced=True``: the per-event dispatch loop
+    has no flat store to hold a shadow in).
     """
     name = "ps_sim"
 
@@ -153,7 +157,7 @@ class PsSimBackend:
                  events_for_phase: Optional[
                      Callable[[int, Any], Sequence[ClusterEvent]]] = None,
                  plane=None, traced: bool = False, trace_chunk: int = 32,
-                 trace_update: str = "auto"):
+                 trace_update: str = "auto", precision: str = "f32"):
         self._factory = fns_factory
         self._fns_cache: dict = {}
         self.tm = tm
@@ -167,6 +171,15 @@ class PsSimBackend:
         self.traced = bool(traced)
         self.trace_chunk = int(trace_chunk)
         self.trace_update = trace_update
+        if precision not in ("f32", "bf16"):
+            raise ValueError(f"unknown precision {precision!r} "
+                             "(expected 'f32' or 'bf16')")
+        if precision != "f32" and not self.traced:
+            raise ValueError(
+                "precision='bf16' requires traced=True: only the "
+                "trace-compiled executor carries the bf16 store + f32 "
+                "master pair (the per-event loop is pytree-based f32)")
+        self.precision = precision
 
     def _fns(self, input_size: int):
         if input_size not in self._fns_cache:
@@ -229,7 +242,8 @@ class PsSimBackend:
                 res = simulate_traced(params, grad_fn, data_fn, workers,
                                       feed=feed,
                                       scan_chunk=self.trace_chunk,
-                                      update=self.trace_update, **kw)
+                                      update=self.trace_update,
+                                      precision=self.precision, **kw)
             else:
                 res = simulate(params, grad_fn, data_fn, workers, **kw)
             params = res.params

@@ -43,14 +43,17 @@ because the per-event float op order matches the legacy jitted update
 exactly — so are the final params, history, ``n_pushes`` and ``sim_time``
 (asserted across BSP/ASP/SSP with jitter and elastic membership by
 ``repro.engine.parity.check_trace_parity``).  Two caveats on bit-identity:
-it assumes f32 parameters (the flat store upcasts non-f32 leaves, so
-mixed-precision trees run the trace path in f32 instead of leaf dtype),
-and it assumes the backward pass itself compiles identically in the chunk
-graph — true for matmul-dominated models, but XLA:CPU picks conv-backward
-algorithms per graph context at some shapes, which reassociates floats at
-epsilon level (~1e-6/step; timeline, sample selection and epoch structure
-stay exact, so conv runs are numerically equivalent rather than
-bit-equal).
+it holds for the default ``precision="f32"`` (under ``precision="bf16"``
+the carry is the bf16 store + f32 master pair — half the per-candidate
+footprint, gradients taken through rounded weights — so bf16 runs are
+gated by the TOLERANCE-band parity mode instead; timeline, sample
+selection, ``n_pushes`` and ``sim_time`` stay exact either way because
+the schedule pass never looks at a gradient), and it assumes the backward
+pass itself compiles identically in the chunk graph — true for
+matmul-dominated models, but XLA:CPU picks conv-backward algorithms per
+graph context at some shapes, which reassociates floats at epsilon level
+(~1e-6/step; timeline, sample selection and epoch structure stay exact,
+so conv runs are numerically equivalent rather than bit-equal).
 
 The event path remains the right tool when per-event control flow must
 *react* to gradients (e.g. loss-adaptive policies) — the trace is only
@@ -259,15 +262,27 @@ def _make_event(ref: Callable, spec, sizes: Tuple[int, ...], update: str,
     grad at the event's (padded) batch, then the fused momentum +
     factor-scaled server push.  Shared verbatim by the sequential chunk
     runner and the batched candidate runner (which vmaps it), so the two
-    replay paths cannot drift apart in float op order."""
+    replay paths cannot drift apart in float op order.
+
+    On a bf16 spec the param carry is the ``(shadow, master)`` pair:
+    gradients differentiate through the bf16 shadow (``unravel`` upcasts,
+    so only stored weights are rounded) but stay f32 all the way to the
+    update (``ravel_master`` shares the geometry) — the master consumes
+    them unrounded and no emulated-bf16 elementwise path appears in the
+    replay; the fused update writes the f32 master and its re-rounded
+    shadow in the same sweep."""
+    mixed = spec.store_dtype != jnp.dtype(jnp.float32)
 
     def event(p2c, vel, b, w, l, f, s, momentum):
+        shadow = p2c[0] if mixed else p2c
+
         def grad_at(k, b):
             # slice the padded event batch back to its true size: each
             # switch branch is shape-static, and the branch taken sees
             # exactly the samples the event path's data_fn handed out
             bk = jax.tree_util.tree_map(lambda v: v[:sizes[k]], b)
-            return spec.ravel(ref()(spec.unravel(p2c), bk))
+            g = ref()(spec.unravel(shadow), bk)
+            return spec.ravel_master(g) if mixed else spec.ravel(g)
 
         if len(sizes) == 1:
             g2 = grad_at(0, b)
@@ -275,6 +290,16 @@ def _make_event(ref: Callable, spec, sizes: Tuple[int, ...], update: str,
             g2 = jax.lax.switch(
                 s, [lambda b, k=k: grad_at(k, b)
                     for k in range(len(sizes))], b)
+        if mixed:
+            master = p2c[1]
+            if update == "pallas":
+                sh, ma, vel = dbl_apply_worker_flat2d(
+                    shadow, g2, vel, w, l, f, momentum, master2=master,
+                    interpret=interpret)
+            else:
+                sh, ma, vel = dbl_apply_worker_xla(
+                    shadow, g2, vel, w, l, f, momentum, master2=master)
+            return (sh, ma), vel
         if update == "pallas":
             return dbl_apply_worker_flat2d(p2c, g2, vel, w, l, f, momentum,
                                            interpret=interpret)
@@ -455,8 +480,8 @@ def execute_trace_batched(init_params_list, grad_fn: Callable,
                           eval_fns: Optional[Sequence[Callable]] = None,
                           seed: int = 0, scan_chunk: int = 32,
                           interpret: Optional[bool] = None,
-                          prefetch: bool = True,
-                          loop: str = "unroll") -> List[SimResult]:
+                          prefetch: bool = True, loop: str = "unroll",
+                          precision: str = "f32") -> List[SimResult]:
     """Replay MANY same-timeline traces as ONE stacked device run.
 
     All traces must share a ``trace_signature`` (same worker/batch/stream
@@ -480,6 +505,8 @@ def execute_trace_batched(init_params_list, grad_fn: Callable,
     ``jax.vmap`` — identical float op order to the sequential replay, so
     for f32 params each candidate's result is bit-identical to its own
     ``execute_trace`` run (asserted by tests/test_tune.py).
+    ``precision="bf16"`` stacks a bf16 shadow AND an f32 master per
+    candidate (evals/final params read the master).
     Returns one ``SimResult`` per candidate, in input order.
     """
     traces = list(traces)
@@ -505,8 +532,13 @@ def execute_trace_batched(init_params_list, grad_fn: Callable,
             raise ValueError("execute_trace_batched needs feed, feeds or "
                              "a data_fn")
         feed = data_fn_feed(data_fn, seed, prefetch=prefetch)
-    spec = flat_spec(init_params_list[0])
-    pC = jnp.stack([spec.ravel_jit(p) for p in init_params_list])
+    mixed = precision != "f32"
+    spec = (flat_spec(init_params_list[0], jnp.bfloat16) if mixed
+            else flat_spec(init_params_list[0]))
+    shC = jnp.stack([spec.ravel_jit(p) for p in init_params_list])
+    pC = ((shC, jnp.stack([spec.ravel_master_jit(p)
+                           for p in init_params_list]))
+          if mixed else shC)
     velC = spec.zeros_candidates(n_cand, max(1, trace.n_workers))
     lrC = jnp.asarray(np.stack([t.lr for t in traces]))
     facC = jnp.asarray(np.stack([t.update_factor for t in traces]))
@@ -517,11 +549,12 @@ def execute_trace_batched(init_params_list, grad_fn: Callable,
     histories: List[List[dict]] = [[] for _ in range(n_cand)]
 
     def fire(fired):
+        buf = pC[1] if mixed else pC         # evals read the f32 master
         for epoch, t in fired:
             for i in range(n_cand):
                 rec = {"epoch": epoch, "sim_time": t}
                 if eval_fns is not None:
-                    rec.update(eval_fns[i](spec.unravel_jit(pC[i])))
+                    rec.update(eval_fns[i](spec.unravel_jit(buf[i])))
                 histories[i].append(rec)
 
     ranges = _chunk_ranges(trace, scan_chunk)
@@ -549,8 +582,9 @@ def execute_trace_batched(init_params_list, grad_fn: Callable,
     else:
         for _, _, fired in trace.segments():
             fire(fired)
+    buf = pC[1] if mixed else pC
     return [SimResult(sim_time=traces[i].sim_time, history=histories[i],
-                      params=spec.unravel_jit(pC[i]),
+                      params=spec.unravel_jit(buf[i]),
                       n_pushes=traces[i].n_pushes)
             for i in range(n_cand)]
 
@@ -582,7 +616,8 @@ def execute_trace(init_params, grad_fn: Callable, trace: SimTrace, *,
                   eval_fn: Optional[Callable] = None, seed: int = 0,
                   scan_chunk: int = 32, interpret: Optional[bool] = None,
                   prefetch: bool = True, loop: str = "unroll",
-                  update: str = "auto") -> SimResult:
+                  update: str = "auto",
+                  precision: str = "f32") -> SimResult:
     """Replay a ``SimTrace`` on device as fused chunk executables.
 
     Carries ``(flat params, stacked velocity)`` through one compiled call
@@ -604,13 +639,18 @@ def execute_trace(init_params, grad_fn: Callable, trace: SimTrace, *,
     elementwise ops (``"xla"`` — leaner off-TPU, where interpret-mode
     Pallas is emulation overhead); ``"auto"`` resolves by backend.  All
     forms share one float op order, so the choice never moves a bit.
+    ``precision="bf16"`` carries the bf16 store + f32 master pair instead
+    (half the param-carry bytes; evals and final params read the master).
     """
     if feed is None:
         if data_fn is None:
             raise ValueError("execute_trace needs a feed or a data_fn")
         feed = data_fn_feed(data_fn, seed, prefetch=prefetch)
-    spec = flat_spec(init_params)
-    p2 = spec.ravel_jit(init_params)
+    mixed = precision != "f32"
+    spec = (flat_spec(init_params, jnp.bfloat16) if mixed
+            else flat_spec(init_params))
+    p2 = ((spec.ravel_jit(init_params), spec.ravel_master_jit(init_params))
+          if mixed else spec.ravel_jit(init_params))
     vel3 = spec.zeros_stacked(max(1, trace.n_workers))
     history: List[dict] = []
 
@@ -618,7 +658,8 @@ def execute_trace(init_params, grad_fn: Callable, trace: SimTrace, *,
         for epoch, t in fired:
             rec = {"epoch": epoch, "sim_time": t}
             if eval_fn is not None:
-                rec.update(eval_fn(spec.unravel_jit(p2)))
+                buf = p2[1] if mixed else p2
+                rec.update(eval_fn(spec.unravel_jit(buf)))
             history.append(rec)
 
     ranges = _chunk_ranges(trace, scan_chunk)
@@ -647,7 +688,8 @@ def execute_trace(init_params, grad_fn: Callable, trace: SimTrace, *,
         for _, _, fired in trace.segments():
             fire(fired)
     return SimResult(sim_time=trace.sim_time, history=history,
-                     params=spec.unravel_jit(p2), n_pushes=trace.n_pushes)
+                     params=spec.unravel_jit(p2[1] if mixed else p2),
+                     n_pushes=trace.n_pushes)
 
 
 def simulate_traced(init_params, grad_fn: Callable,
@@ -661,11 +703,15 @@ def simulate_traced(init_params, grad_fn: Callable,
                     scan_chunk: int = 32,
                     interpret: Optional[bool] = None,
                     prefetch: bool = True, loop: str = "unroll",
-                    update: str = "auto") -> SimResult:
+                    update: str = "auto",
+                    precision: str = "f32") -> SimResult:
     """Drop-in ``simulate()`` replacement on the trace-compiled path:
     schedule pass (host) + execute pass (fused device scans).  Same
     arguments, same ``SimResult`` — bit-identical to the event path for
-    f32 params (``engine.parity.check_trace_parity``)."""
+    f32 params (``engine.parity.check_trace_parity``); under
+    ``precision="bf16"`` the replay carries the bf16 store + f32 master
+    pair and matches the event path within the documented tolerance band
+    instead."""
     trace = schedule_pass(workers, epochs=epochs,
                           lr_for_epoch=lr_for_epoch, sync=sync,
                           staleness=staleness, seed=seed, events=events)
@@ -673,4 +719,4 @@ def simulate_traced(init_params, grad_fn: Callable,
                          feed=feed, momentum=momentum, eval_fn=eval_fn,
                          seed=seed, scan_chunk=scan_chunk,
                          interpret=interpret, prefetch=prefetch, loop=loop,
-                         update=update)
+                         update=update, precision=precision)

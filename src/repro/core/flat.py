@@ -23,13 +23,22 @@ cluster backends and ``checkpoint.ckpt`` while checkpoints keep the
 public pytree format (see ``ckpt._expand_flat``), bit-for-bit with files
 written from plain pytrees.
 
-Float32 is the server-update compute dtype: non-f32 leaves are upcast on
-``ravel`` and cast back on ``unravel`` (f32 leaves round-trip bit-for-bit).
+Precision: ``store_dtype`` (default float32) sets the buffer dtype the
+codec produces.  Float32 is the server-update compute dtype either way —
+an f32 store upcasts non-f32 leaves on ``ravel`` and casts back on
+``unravel`` (f32 leaves round-trip bit-for-bit, same behavior as before
+``store_dtype`` existed).  A bfloat16 store halves the buffer's bytes
+(``store_bytes``) and rows pad to the wider 16-row bf16 sublane tile;
+``ravel_master`` then produces the float32 MASTER buffer with the SAME
+``(rows, LANE)`` geometry, so the mixed-dtype kernels in
+``kernels.dbl_merge`` update master + bf16 shadow in one same-shape
+elementwise sweep (a 16-row-aligned buffer is trivially 8-row-aligned, so
+the f32 master is a legal f32 tiling too).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,17 +46,24 @@ import numpy as np
 
 LANE = 128            # VPU lane width — last dim of the flat buffer
 SUBLANE = 8           # f32 sublane tile — row padding granularity
+SUBLANE_BF16 = 16     # bf16 sublane tile (2-byte dtypes tile 16 rows)
 MAX_WHOLE_ROWS = 2048  # single whole-buffer kernel block up to here (~1MB)
 BLOCK_ROWS = 1024     # grid block height once the buffer exceeds that
 
 
-def padded_rows(n: int) -> int:
+def _sublane(store_dtype) -> int:
+    return SUBLANE_BF16 if jnp.dtype(store_dtype).itemsize == 2 else SUBLANE
+
+
+def padded_rows(n: int, store_dtype=jnp.float32) -> int:
     """Rows of the (rows, LANE) buffer holding ``n`` elements: lane- and
-    sublane-aligned, and block-aligned once large enough that the merge
-    kernel must grid over it (``dbl_merge_flat2d`` picks whole-buffer vs
-    gridded from the same thresholds)."""
+    sublane-aligned (8 rows for f32, 16 for 2-byte dtypes), and
+    block-aligned once large enough that the merge kernel must grid over
+    it (``dbl_merge_flat2d`` picks whole-buffer vs gridded from the same
+    thresholds)."""
+    sub = _sublane(store_dtype)
     rows = max(1, -(-n // LANE))
-    rows = -(-rows // SUBLANE) * SUBLANE
+    rows = -(-rows // sub) * sub
     if rows > MAX_WHOLE_ROWS:
         rows = -(-rows // BLOCK_ROWS) * BLOCK_ROWS
     return rows
@@ -57,10 +73,11 @@ class FlatSpec:
     """One tree structure's flat layout (offsets/shapes computed once)."""
 
     def __init__(self, treedef, shapes: Tuple[tuple, ...],
-                 dtypes: Tuple[Any, ...]):
+                 dtypes: Tuple[Any, ...], store_dtype=jnp.float32):
         self.treedef = treedef
         self.shapes = tuple(tuple(s) for s in shapes)
         self.dtypes = tuple(jnp.dtype(d) for d in dtypes)
+        self.store_dtype = jnp.dtype(store_dtype)
         self.sizes = tuple(int(np.prod(s)) if s else 1 for s in self.shapes)
         offs, off = [], 0
         for sz in self.sizes:
@@ -68,29 +85,47 @@ class FlatSpec:
             off += sz
         self.offsets = tuple(offs)
         self.n = off                       # live elements
-        self.rows = padded_rows(self.n)
+        self.rows = padded_rows(self.n, self.store_dtype)
         self.shape = (self.rows, LANE)     # the buffer shape
         self.pad = self.rows * LANE - self.n
         self._ravel_jit = None
         self._unravel_jit = None
+        self._ravel_master_jit = None
 
     def __repr__(self):
         return (f"FlatSpec(n={self.n}, rows={self.rows}, "
-                f"leaves={len(self.sizes)})")
+                f"leaves={len(self.sizes)}, store={self.store_dtype.name})")
+
+    @property
+    def store_bytes(self) -> int:
+        """Bytes of one store buffer (padding included) — what a bf16
+        store halves relative to the f32 one."""
+        return self.rows * LANE * self.store_dtype.itemsize
 
     # -- codec ---------------------------------------------------------
-    def ravel(self, tree):
-        """tree -> (rows, LANE) f32 buffer.  Works for any tree of this
-        structure (params, velocity, gradients) regardless of leaf dtype."""
+    def _ravel_as(self, tree, dtype):
         leaves = jax.tree_util.tree_leaves(tree)
         if len(leaves) != len(self.sizes):
             raise ValueError(f"tree has {len(leaves)} leaves, spec expects "
                              f"{len(self.sizes)}")
         flat = jnp.concatenate(
-            [jnp.asarray(l).reshape(-1).astype(jnp.float32) for l in leaves])
+            [jnp.asarray(l).reshape(-1).astype(dtype) for l in leaves])
         if self.pad:
             flat = jnp.pad(flat, (0, self.pad))
         return flat.reshape(self.shape)
+
+    def ravel(self, tree):
+        """tree -> (rows, LANE) ``store_dtype`` buffer.  Works for any tree
+        of this structure (params, velocity, gradients) regardless of leaf
+        dtype."""
+        return self._ravel_as(tree, self.store_dtype)
+
+    def ravel_master(self, tree):
+        """tree -> (rows, LANE) float32 MASTER buffer with this spec's
+        exact geometry.  On an f32 spec this IS ``ravel``; on a bf16 spec
+        it is the full-precision twin the mixed-dtype kernels update
+        alongside the bf16 shadow."""
+        return self._ravel_as(tree, jnp.float32)
 
     def unravel(self, buf):
         """(rows, LANE) buffer -> tree with the original shapes/dtypes."""
@@ -142,22 +177,30 @@ class FlatSpec:
             self._unravel_jit = jax.jit(self.unravel)
         return self._unravel_jit(buf)
 
+    def ravel_master_jit(self, tree):
+        if self._ravel_master_jit is None:
+            self._ravel_master_jit = jax.jit(self.ravel_master)
+        return self._ravel_master_jit(tree)
+
 
 _SPECS: Dict[tuple, FlatSpec] = {}
 
 
-def flat_spec(tree) -> FlatSpec:
+def flat_spec(tree, store_dtype=None) -> FlatSpec:
     """The (cached) ``FlatSpec`` for ``tree``'s structure.  Two trees with
-    equal treedef + leaf shapes/dtypes share one spec object, so codec
-    layout is computed once per phase schedule, not once per step."""
+    equal treedef + leaf shapes/dtypes (and store dtype — ``None`` means
+    the default f32 store) share one spec object, so codec layout is
+    computed once per phase schedule, not once per step."""
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     shapes = tuple(tuple(np.shape(l)) for l in leaves)
     dtypes = tuple(str(l.dtype) if hasattr(l, "dtype")
                    else str(np.asarray(l).dtype) for l in leaves)
-    key = (treedef, shapes, dtypes)
+    store = jnp.dtype(store_dtype) if store_dtype is not None \
+        else jnp.dtype(jnp.float32)
+    key = (treedef, shapes, dtypes, str(store))
     spec = _SPECS.get(key)
     if spec is None:
-        spec = FlatSpec(treedef, shapes, dtypes)
+        spec = FlatSpec(treedef, shapes, dtypes, store)
         _SPECS[key] = spec
     return spec
 
@@ -170,14 +213,23 @@ class FlatParams:
     (unwrapped via the codec at entry), and ``checkpoint.ckpt`` saves /
     restores it through the public pytree format — files are bit-for-bit
     identical to checkpoints written from the plain pytree.
+
+    ``master`` (bf16 stores) is the float32 master buffer in the same
+    geometry; when present it is the value of record — ``to_tree`` (and
+    therefore every checkpoint) reads it, so files stay byte-identical to
+    the pytree format regardless of the store dtype.
     """
     buf: Any
     spec: FlatSpec
+    master: Optional[Any] = None
 
     @classmethod
     def from_tree(cls, tree, spec: FlatSpec | None = None) -> "FlatParams":
         spec = spec or flat_spec(tree)
-        return cls(spec.ravel(tree), spec)
+        master = (spec.ravel_master_jit(tree)
+                  if spec.store_dtype != jnp.dtype(jnp.float32) else None)
+        return cls(spec.ravel_jit(tree), spec, master)
 
     def to_tree(self):
-        return self.spec.unravel_jit(self.buf)
+        src = self.buf if self.master is None else self.master
+        return self.spec.unravel_jit(src)

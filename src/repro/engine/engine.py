@@ -103,6 +103,13 @@ class TrainEngine:
       a ``batch_struct``-capable batch_fn such as ``DataPlane``).  The
       boundary stall either way lands in ``engine.stall_log`` as
       ``{"phase", "kind", "stall_s", "warm"}`` records.
+    precision: ``"f32"`` (default — every path bit-identical to before the
+      knob existed) or ``"bf16"``: the scan loop carries a bf16 flat store
+      (half the parameter HBM) plus the donated f32 master carry, and the
+      fused kernel writes master + re-rounded shadow in its one launch.
+      Like ``server_momentum``, bf16 lives in the fused scan path — the
+      constructor rejects configurations that bypass it, and ``run``
+      raises on phases that would.
     """
 
     def __init__(self, cfg, optimizer: Optimizer, *,
@@ -111,7 +118,8 @@ class TrainEngine:
                  interpret: Optional[bool] = None,
                  scan_loop="auto", scan_chunk: int = 32,
                  server_momentum: float = 0.0,
-                 overlap_compile: bool = True):
+                 overlap_compile: bool = True,
+                 precision: str = "f32"):
         self.cfg = cfg
         self.optimizer = optimizer
         self.fused_merge = fused_merge
@@ -124,6 +132,10 @@ class TrainEngine:
         self.scan_chunk = int(scan_chunk)
         self.server_momentum = float(server_momentum)
         self.overlap_compile = bool(overlap_compile)
+        if precision not in ("f32", "bf16"):
+            raise ValueError(f"unknown precision {precision!r} "
+                             "(expected 'f32' or 'bf16')")
+        self.precision = precision
         if self.server_momentum > 0 and (scan_loop is False
                                          or fused_merge is False
                                          or mesh is not None):
@@ -131,6 +143,14 @@ class TrainEngine:
             # per-step loop would silently train plain SGD instead
             raise ValueError(
                 "server_momentum requires the fused scan path "
+                "(scan_loop enabled, fused_merge on, no mesh)")
+        if precision != "f32" and (scan_loop is False
+                                   or fused_merge is False
+                                   or mesh is not None):
+            # the bf16 store + f32 master pair lives in the scan path's
+            # kernel sweep; the per-step paths would silently train f32
+            raise ValueError(
+                "precision='bf16' requires the fused scan path "
                 "(scan_loop enabled, fused_merge on, no mesh)")
         self._cache: dict = {}
         self._phase_cache: dict = {}
@@ -145,6 +165,16 @@ class TrainEngine:
         self.stall_log: list = []
 
     # ------------------------------------------------------------------
+    @property
+    def _mixed(self) -> bool:
+        return self.precision != "f32"
+
+    def _param_spec(self, params) -> FlatSpec:
+        """The params codec at the engine's precision (store dtype only —
+        f32 engines get exactly the spec they always did)."""
+        return (flat_spec(params, jnp.bfloat16) if self._mixed
+                else flat_spec(params))
+
     def _kind_for(self, phase: Phase) -> str:
         if phase.micro_steps and phase.layout is not None:
             return "micro"
@@ -286,8 +316,8 @@ class TrainEngine:
             return False
         kind = self._kind_for(phase)
         if self._use_scan(kind):
-            spec = flat_spec(params)
-            vspec = (flat_spec(opt_state["v"])
+            spec = self._param_spec(params)
+            vspec = (self._param_spec(opt_state["v"])
                      if self.server_momentum > 0 and isinstance(opt_state,
                                                                 dict)
                      and "v" in opt_state else None)
@@ -308,7 +338,13 @@ class TrainEngine:
                 if (cur is not None and not _is_lazy(cur)) \
                         or ck in self._inflight:
                     continue
-            p2s = jax.ShapeDtypeStruct(spec.shape, jnp.float32)
+            if self._mixed:
+                # the scan carry is the (shadow, master) buffer pair; the
+                # velocity is always f32 in the store's geometry
+                p2s = (jax.ShapeDtypeStruct(spec.shape, spec.store_dtype),
+                       jax.ShapeDtypeStruct(spec.shape, jnp.float32))
+            else:
+                p2s = jax.ShapeDtypeStruct(spec.shape, jnp.float32)
             v2s = (jax.ShapeDtypeStruct(vspec.shape, jnp.float32)
                    if vspec is not None else None)
             bst = batch_fn.batch_struct(phase, c)
@@ -596,7 +632,10 @@ class TrainEngine:
             nonlocal params, opt_state, flat
             if flat is not None:
                 spec, vspec, p2, v2 = flat
-                params = spec.unravel_jit(p2)
+                # mixed precision carries (shadow, master); the f32 master
+                # is the value of record — checkpoints and downstream
+                # phases see full-precision params
+                params = spec.unravel_jit(p2[1] if self._mixed else p2)
                 if v2 is not None:
                     # the velocity's OWN spec — its leaf dtypes may differ
                     # from the params' (e.g. f32 state over bf16 params)
@@ -615,8 +654,8 @@ class TrainEngine:
                 if flat is not None:
                     spec_n, vspec_n = flat[0], flat[1]
                 else:
-                    spec_n = flat_spec(params)
-                    vspec_n = (flat_spec(opt_state["v"]) if mom > 0
+                    spec_n = self._param_spec(params)
+                    vspec_n = (self._param_spec(opt_state["v"]) if mom > 0
                                and isinstance(opt_state, dict)
                                and "v" in opt_state else None)
                 self._schedule_warm_scan(nxt, spec_n, vspec_n, batch_fn)
@@ -635,8 +674,12 @@ class TrainEngine:
             kind = self._kind_for(phase)
             if self._use_scan(kind):
                 if flat is None:
-                    spec = flat_spec(params)
-                    p2 = spec.ravel_jit(params)
+                    spec = self._param_spec(params)
+                    if self._mixed:
+                        p2 = (spec.ravel_jit(params),
+                              spec.ravel_master_jit(params))
+                    else:
+                        p2 = spec.ravel_jit(params)
                     vspec = v2 = None
                     if mom > 0:
                         if not (isinstance(opt_state, dict)
@@ -644,8 +687,10 @@ class TrainEngine:
                             raise ValueError(
                                 "server_momentum needs an opt_state with a "
                                 'params-shaped "v" tree (e.g. sgd_momentum)')
-                        vspec = flat_spec(opt_state["v"])
-                        v2 = vspec.ravel_jit(opt_state["v"])
+                        vspec = self._param_spec(opt_state["v"])
+                        # the velocity stays f32 whatever the store dtype
+                        # (ravel_master IS ravel on an f32 spec)
+                        v2 = vspec.ravel_master_jit(opt_state["v"])
                 else:
                     spec, vspec, p2, v2 = flat
                 flat = (spec, vspec, p2, v2)
@@ -664,6 +709,13 @@ class TrainEngine:
                 raise ValueError(
                     f"server_momentum is set but phase {pi} ({kind}) "
                     "bypasses the fused scan path; PS-server momentum only "
+                    "applies to fused dual-batch phases")
+            if self._mixed:
+                # likewise: the per-step paths have no bf16 store/master —
+                # they would silently train f32
+                raise ValueError(
+                    f"precision='bf16' is set but phase {pi} ({kind}) "
+                    "bypasses the fused scan path; the bf16 store only "
                     "applies to fused dual-batch phases")
             materialize()
             warm_next(pi)

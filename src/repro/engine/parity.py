@@ -37,6 +37,13 @@ Three assertions on a tiny model:
    sizes, elastic membership and per-epoch LR schedules, in both fused
    update forms.
 
+Checks 3 and 5 additionally carry a ``precision="bf16"`` mode gating the
+mixed store (bf16 shadow + fused f32 master update) within documented
+TOLERANCE bands — timeline facts (pushes, sim clock, epoch structure)
+stay exact, params/losses absorb only the bf16 weight rounding.  The f32
+modes are untouched: same geometry, same bit/2e-5 gates as before the
+precision knob existed.
+
 Run directly:  PYTHONPATH=src python -m repro.engine.parity
 """
 from __future__ import annotations
@@ -139,10 +146,29 @@ def check_fused_parity(*, seed: int = 0, lr: float = 0.05,
 
 
 def check_backend_parity(*, seed: int = 0, lr: float = 0.05,
-                         atol: float = 2e-5) -> dict:
-    """One schedule, two backends: PsSimBackend (BSP, 1 worker, factor 1.0,
-    momentum 0) vs SpmdBackend (weighted step, plain SGD) on an identical
-    batch stream -> matching final params."""
+                         atol: float = None, rtol: float = 0.0,
+                         precision: str = "f32") -> dict:
+    """One schedule, two backends: PsSimBackend vs SpmdBackend on an
+    identical batch stream -> matching final params.
+
+    ``precision="f32"`` (default): BSP, 1 worker, factor 1.0, momentum 0
+    on the sim side vs the weighted step + plain SGD on the SPMD side —
+    agreement within fp32 tolerance (``atol`` defaults to 2e-5,
+    ``rtol=0``), exactly the pre-precision-knob gate.
+
+    ``precision="bf16"``: both backends run the mixed store (bf16 shadow +
+    fused f32 master update) — the traced sim executor vs the engine's
+    fused bf16 scan.  The geometry makes the two updates the SAME merge:
+    the SPMD layout splits the 8-row batch into equal large/small halves
+    with ``factor_small=1.0`` and fully-valid small rows, so the fused
+    dual-batch update  w − lr·(g_L + g_S)/2  is the plain mean update the
+    single sim worker (factor 1.0, BSP) applies.  Both sides round
+    through the identical bf16 shadow each step, so the residual is only
+    gradient reduction order — gated at ``atol=2e-3`` (documented band;
+    observed ~1e-4 on this model)."""
+    mixed = precision == "bf16"
+    if atol is None:
+        atol = 2e-3 if mixed else 2e-5
     cfg, params, _ = _tiny_setup(seed)
     tm = LinearTimeModel(a=1.0, b=24.6)
     # one large worker, factor 1.0, exactly 1 iteration per epoch (d == B_L)
@@ -155,6 +181,16 @@ def check_backend_parity(*, seed: int = 0, lr: float = 0.05,
                           plan=plan, epochs=2) \
         + single_phase(input_size=16, n_steps=2, lr=lr / 5, batch_size=8,
                        plan=plan, epochs=2)
+    if mixed:
+        # the SPMD side needs the FUSED path (bf16 lives in the scan
+        # kernel sweep): give every phase a dual-batch layout whose merge
+        # is algebraically the single-worker mean update — equal halves,
+        # factor 1.0, all small rows valid
+        from dataclasses import replace as _replace
+        from repro.core.spmd_dual_batch import SpmdDualBatch
+        layout = SpmdDualBatch(global_batch=8, n_workers=4, n_small=2,
+                               small_valid=2, factor_small=1.0)
+        phases = tuple(_replace(p, layout=layout) for p in phases)
 
     # --- PS-sim backend: sequential BSP iterations over the batch stream --
     counter = {"i": 0}
@@ -169,30 +205,38 @@ def check_backend_parity(*, seed: int = 0, lr: float = 0.05,
             return b
         return grad_fn, data_fn, None
 
-    sim_backend = PsSimBackend(fns_factory, tm=tm, sync=BSP(), momentum=0.0)
+    sim_backend = PsSimBackend(fns_factory, tm=tm, sync=BSP(), momentum=0.0,
+                               traced=mixed, precision=precision)
     res_sim = sim_backend.run(phases, jax.tree_util.tree_map(jnp.copy,
                                                              params),
                               seed=seed)
 
     # --- SPMD backend: same stream by global step index -------------------
-    engine = TrainEngine(cfg, sgd_momentum(0.0))
+    engine = TrainEngine(cfg, sgd_momentum(0.0), sgd_server=mixed,
+                         precision=precision)
     spmd_backend = SpmdBackend(engine, lambda phase, gstep: batches[gstep])
     res_spmd = spmd_backend.run(phases, jax.tree_util.tree_map(jnp.copy,
                                                                params),
                                 seed=seed)
 
+    leaves_sim = jax.tree_util.tree_leaves(res_sim.params)
+    leaves_spmd = jax.tree_util.tree_leaves(res_spmd.params)
     diff = max(float(jnp.max(jnp.abs(a.astype(jnp.float32)
                                      - b.astype(jnp.float32))))
-               for a, b in zip(jax.tree_util.tree_leaves(res_sim.params),
-                               jax.tree_util.tree_leaves(res_spmd.params)))
-    assert diff < atol, (
-        f"PsSimBackend and SpmdBackend diverge on the same schedule: "
-        f"{diff} >= {atol}")
+               for a, b in zip(leaves_sim, leaves_spmd))
+    ok = all(np.allclose(np.asarray(a, np.float32),
+                         np.asarray(b, np.float32), atol=atol, rtol=rtol)
+             for a, b in zip(leaves_sim, leaves_spmd))
+    assert ok, (
+        f"PsSimBackend and SpmdBackend diverge on the same schedule "
+        f"(precision={precision}): max abs diff {diff} outside "
+        f"atol={atol} rtol={rtol}")
     # unified per-phase records line up (same work per phase)
     assert [r["steps"] for r in res_sim.phases] \
         == [r["steps"] for r in res_spmd.phases] == [2, 2]
     assert [r["phase"] for r in res_sim.phases] == [0, 1]
     return {"max_param_diff": diff, "sim_time": res_sim.time,
+            "precision": precision,
             "spmd_steps": sum(r["steps"] for r in res_spmd.phases)}
 
 
@@ -286,7 +330,8 @@ def check_data_plane_parity(*, seed: int = 0) -> dict:
             "sim_pushes": sum(r["steps"] for r in res_sim.phases)}
 
 
-def check_trace_parity(*, seed: int = 0) -> dict:
+def check_trace_parity(*, seed: int = 0, precision: str = "f32",
+                       atol: float = 5e-3, rtol: float = 0.0) -> dict:
     """5. **Trace parity** — the trace-compiled simulator
     (``repro.cluster.trace.simulate_traced``: host-side schedule pass +
     fused device chunks) replays the event-driven ``simulate()``
@@ -295,7 +340,15 @@ def check_trace_parity(*, seed: int = 0) -> dict:
     three sync policies, with straggler jitter > 0, mixed worker batch
     sizes (the executor's size-switch path), a real per-epoch LR schedule
     and an elastic join+leave timeline, in both fused-update forms (the
-    Pallas worker kernel and its XLA elementwise twin)."""
+    Pallas worker kernel and its XLA elementwise twin).
+
+    ``precision="bf16"`` gates the mixed-store replay against the SAME
+    f32 event-path reference: the timeline facts (``n_pushes``,
+    ``sim_time``, history epochs/sim_times) stay EXACTLY equal — the
+    schedule pass never reads a gradient — while params and eval losses
+    land within the documented tolerance band (``atol=5e-3``, observed
+    ~1e-3 over two epochs on the tiny model; bf16 weight rounding is the
+    entire residual)."""
     from repro.cluster import (ASP, BSP, SSP, ClusterEvent, WorkerSpec,
                                simulate)
     from repro.cluster.trace import simulate_traced
@@ -330,29 +383,52 @@ def check_trace_parity(*, seed: int = 0) -> dict:
         ref = simulate(params, grad_fn, data_fn, workers, **kw)
         for update in ("xla", "pallas"):
             res = simulate_traced(params, grad_fn, data_fn, workers,
-                                  scan_chunk=8, update=update, **kw)
+                                  scan_chunk=8, update=update,
+                                  precision=precision, **kw)
             for a, b in zip(jax.tree_util.tree_leaves(ref.params),
                             jax.tree_util.tree_leaves(res.params)):
-                assert np.array_equal(np.asarray(a), np.asarray(b)), (
-                    f"trace params diverge from the event path "
+                if precision == "f32":
+                    assert np.array_equal(np.asarray(a), np.asarray(b)), (
+                        f"trace params diverge from the event path "
+                        f"(sync={sync.name}, update={update})")
+                else:
+                    assert np.allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       atol=atol, rtol=rtol), (
+                        f"bf16 trace params leave the tolerance band vs "
+                        f"the f32 event path (sync={sync.name}, "
+                        f"update={update}, atol={atol}, rtol={rtol})")
+            if precision == "f32":
+                assert res.history == ref.history, (
+                    f"trace history diverges (sync={sync.name}, "
+                    f"update={update})")
+            else:
+                # timeline facts exact, eval losses within the band
+                assert [(h["epoch"], h["sim_time"]) for h in res.history] \
+                    == [(h["epoch"], h["sim_time"]) for h in ref.history]
+                assert all(abs(a["loss"] - b["loss"]) <= atol + 1e-2
+                           for a, b in zip(res.history, ref.history)), (
+                    f"bf16 trace eval losses leave the band "
                     f"(sync={sync.name}, update={update})")
-            assert res.history == ref.history, (
-                f"trace history diverges (sync={sync.name}, "
-                f"update={update})")
             assert res.n_pushes == ref.n_pushes
             assert res.sim_time == ref.sim_time
             checked += 1
-    return {"configs_checked": checked,
+    return {"configs_checked": checked, "precision": precision,
             "events_replayed": ref.n_pushes}
 
 
 def check_parity(*, seed: int = 0) -> dict:
-    """Run all checks; raises AssertionError on any mismatch."""
+    """Run all checks; raises AssertionError on any mismatch.  The f32
+    gates are exactly the pre-precision-knob ones; the two bf16 entries
+    run the tolerance-band modes of the backend and trace checks."""
     return {"merge": check_merge_parity(seed=seed),
             "fused": check_fused_parity(seed=seed),
             "backend": check_backend_parity(seed=seed),
             "data_plane": check_data_plane_parity(seed=seed),
-            "trace": check_trace_parity(seed=seed)}
+            "trace": check_trace_parity(seed=seed),
+            "backend_bf16": check_backend_parity(seed=seed,
+                                                 precision="bf16"),
+            "trace_bf16": check_trace_parity(seed=seed, precision="bf16")}
 
 
 if __name__ == "__main__":

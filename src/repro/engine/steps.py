@@ -151,6 +151,16 @@ def make_fused_phase_scan(cfg, layout, spec, *, lr: float,
     transposes the unravel into the ravel — no per-step pad/reshape), and
     ``dbl_apply_flat2d`` finishes with the single apply(+momentum) sweep.
     ``lr`` is baked in (phases carry a constant lr on this path).
+
+    Mixed precision: when ``spec`` has a non-f32 ``store_dtype`` the
+    ``p2`` carry is the ``(shadow, master)`` buffer pair — the
+    low-precision shadow drives forward/backward (``spec.unravel`` upcasts
+    leaves to their f32 dtypes, so only the stored weights are rounded),
+    the gradient is taken w.r.t. the EXACT f32 view of the shadow (the
+    cast is linear, so it is the same merged gradient — but it reaches the
+    kernel unrounded and the backward never touches emulated-bf16 ops),
+    and ``dbl_apply_flat2d``'s master form writes the f32 master and the
+    re-rounded shadow in the same single launch.
     """
     from repro.kernels.dbl_merge import dbl_apply_flat2d
 
@@ -165,6 +175,7 @@ def make_fused_phase_scan(cfg, layout, spec, *, lr: float,
     f = float(layout.factor_small)
     lr_f = float(lr)
     mom = float(momentum)
+    mixed = spec.store_dtype != jnp.dtype(jnp.float32)
 
     def merged_loss(p2, batch, rng):
         params = spec.unravel(p2)
@@ -181,8 +192,26 @@ def make_fused_phase_scan(cfg, layout, spec, *, lr: float,
         # extra pytree structure in the carry costs real per-step time
         def step_update(p2, v2, xs):
             batch, rng = xs if rngs is not None else (xs, None)
+            shadow = p2[0] if mixed else p2
+            # mixed: differentiate w.r.t. the f32 VIEW of the shadow — the
+            # upcast is exact (forward still sees the bf16-rounded values)
+            # and the cast is linear, so the gradient is the same merged
+            # gradient, but it arrives f32: the backward stays off the
+            # emulated-bf16 path (2.4x slower on CPU) and the kernel's
+            # master update consumes it unrounded
             (loss, _), g2 = jax.value_and_grad(merged_loss, has_aux=True)(
-                p2, batch, rng)
+                shadow.astype(jnp.float32) if mixed else shadow, batch, rng)
+            if mixed:
+                master = p2[1]
+                if mom > 0:
+                    shadow, master, v2 = dbl_apply_flat2d(
+                        shadow, g2, vel2=v2, lr=lr_f, momentum=mom,
+                        master2=master, interpret=interpret)
+                else:
+                    shadow, master = dbl_apply_flat2d(
+                        shadow, g2, lr=lr_f, master2=master,
+                        interpret=interpret)
+                return (shadow, master), v2, loss
             if mom > 0:
                 p2, v2 = dbl_apply_flat2d(p2, g2, vel2=v2, lr=lr_f,
                                           momentum=mom, interpret=interpret)

@@ -33,6 +33,16 @@ velocity row block, applies momentum + the factor-scaled server push, and
 scatters the row back — local update and server push in a single launch,
 with ``lr`` / ``factor`` / ``momentum`` / ``wid`` as tiny traced operands
 so one executable serves every event of a ``lax.scan`` over the trace.
+
+Mixed precision (bf16 store): every entry point takes ``master2=`` — the
+float32 master-weight buffer in the store's exact ``(rows, LANE)``
+geometry (``FlatSpec.ravel_master``).  The kernel then updates the MASTER
+in f32 (gradient upcast, f32 velocity) and writes BOTH the updated master
+and its rounded ``p2.dtype`` shadow in the SAME single launch, each output
+aliased onto its input buffer — no extra sweep, no extra HBM round trip
+for keeping a low-precision store trainable.  With ``master2=None`` the
+f32-only kernels are byte-for-byte what they were before the option
+existed.
 """
 from __future__ import annotations
 
@@ -89,6 +99,57 @@ def _kernel_apply_vel(p_ref, g_ref, v_ref, op_ref, ov_ref, *,
     op_ref[...] = (p - lr * v).astype(op_ref.dtype)
 
 
+# -- mixed-dtype master forms: the math runs on the f32 MASTER (gradient
+# upcast from the low-precision store), and the same pass writes the
+# updated master AND its rounded store-dtype shadow.  The shadow input ref
+# is never read — it exists so the shadow output can alias its buffer.
+def _kernel_master(p_ref, m_ref, gl_ref, gs_ref, op_ref, om_ref, *,
+                   factor: float, lr: float):
+    del p_ref
+    m = m_ref[...].astype(jnp.float32)
+    gl = gl_ref[...].astype(jnp.float32)
+    gs = gs_ref[...].astype(jnp.float32)
+    step = (gl + factor * gs) * (1.0 / (1.0 + factor))
+    m = m - lr * step
+    om_ref[...] = m.astype(om_ref.dtype)
+    op_ref[...] = m.astype(op_ref.dtype)
+
+
+def _kernel_master_vel(p_ref, m_ref, gl_ref, gs_ref, v_ref, op_ref, om_ref,
+                       ov_ref, *, factor: float, lr: float, momentum: float):
+    del p_ref
+    m = m_ref[...].astype(jnp.float32)
+    gl = gl_ref[...].astype(jnp.float32)
+    gs = gs_ref[...].astype(jnp.float32)
+    g = (gl + factor * gs) * (1.0 / (1.0 + factor))
+    v = momentum * v_ref[...].astype(jnp.float32) + g
+    m = m - lr * v
+    ov_ref[...] = v.astype(ov_ref.dtype)
+    om_ref[...] = m.astype(om_ref.dtype)
+    op_ref[...] = m.astype(op_ref.dtype)
+
+
+def _kernel_apply_master(p_ref, m_ref, g_ref, op_ref, om_ref, *, lr: float):
+    del p_ref
+    m = m_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    m = m - lr * g
+    om_ref[...] = m.astype(om_ref.dtype)
+    op_ref[...] = m.astype(op_ref.dtype)
+
+
+def _kernel_apply_master_vel(p_ref, m_ref, g_ref, v_ref, op_ref, om_ref,
+                             ov_ref, *, lr: float, momentum: float):
+    del p_ref
+    m = m_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    v = momentum * v_ref[...].astype(jnp.float32) + g
+    m = m - lr * v
+    ov_ref[...] = v.astype(ov_ref.dtype)
+    om_ref[...] = m.astype(om_ref.dtype)
+    op_ref[...] = m.astype(op_ref.dtype)
+
+
 def _launch(kernel, ins, out_shape, aliases, *, interpret, block_rows):
     """One ``pallas_call`` over same-shaped flat buffers: a single
     whole-buffer block up to ``MAX_WHOLE_ROWS`` rows, a 1-D grid of
@@ -118,8 +179,12 @@ def _launch(kernel, ins, out_shape, aliases, *, interpret, block_rows):
                           input_output_aliases=aliases)(*ins)
 
 
+def _sds(x):
+    return jax.ShapeDtypeStruct(x.shape, x.dtype)
+
+
 def dbl_merge_flat2d(p2, gl2, gs2, *, factor: float, lr: float,
-                     vel2=None, momentum: float = 0.0,
+                     vel2=None, momentum: float = 0.0, master2=None,
                      interpret: Optional[bool] = None,
                      block_rows: int = BLOCK_ROWS):
     """ONE fused server update over the whole flat store.
@@ -129,7 +194,25 @@ def dbl_merge_flat2d(p2, gl2, gs2, *, factor: float, lr: float,
     ``(params, velocity)`` pair when ``vel2`` is given (momentum folded
     into the same pass).  Updates alias their inputs, so jit callers that
     donate the carry run the sweep in place.
+
+    ``master2`` (mixed precision): the f32 master buffer backing a
+    low-precision ``p2``.  The update then runs on the master and the same
+    launch writes both it and the rounded ``p2``-dtype shadow — returns
+    ``(params, master)`` or ``(params, master, velocity)``, every output
+    aliased onto its input.
     """
+    if master2 is not None:
+        if vel2 is None:
+            return _launch(
+                functools.partial(_kernel_master, factor=factor, lr=lr),
+                (p2, master2, gl2, gs2), (_sds(p2), _sds(master2)),
+                {0: 0, 1: 1}, interpret=interpret, block_rows=block_rows)
+        return _launch(
+            functools.partial(_kernel_master_vel, factor=factor, lr=lr,
+                              momentum=momentum),
+            (p2, master2, gl2, gs2, vel2),
+            (_sds(p2), _sds(master2), _sds(vel2)),
+            {0: 0, 1: 1, 4: 2}, interpret=interpret, block_rows=block_rows)
     if vel2 is None:
         return _launch(functools.partial(_kernel, factor=factor, lr=lr),
                        (p2, gl2, gs2),
@@ -144,7 +227,7 @@ def dbl_merge_flat2d(p2, gl2, gs2, *, factor: float, lr: float,
 
 
 def dbl_apply_flat2d(p2, g2, *, lr: float, vel2=None, momentum: float = 0.0,
-                     interpret: Optional[bool] = None,
+                     master2=None, interpret: Optional[bool] = None,
                      block_rows: int = BLOCK_ROWS):
     """ONE server apply over the whole flat store, for a gradient that
     already carries the dual-batch merge.
@@ -156,8 +239,22 @@ def dbl_apply_flat2d(p2, g2, *, lr: float, vel2=None, momentum: float = 0.0,
 
         v' = m·v + g;   w' = w − lr·v'      (v ≡ g when m == 0)
 
-    Same aliasing/blocking contract as ``dbl_merge_flat2d``.
+    Same aliasing/blocking contract as ``dbl_merge_flat2d``, including the
+    mixed-precision ``master2`` form (returns ``(params, master)`` or
+    ``(params, master, velocity)``, one launch either way).
     """
+    if master2 is not None:
+        if vel2 is None:
+            return _launch(
+                functools.partial(_kernel_apply_master, lr=lr),
+                (p2, master2, g2), (_sds(p2), _sds(master2)), {0: 0, 1: 1},
+                interpret=interpret, block_rows=block_rows)
+        return _launch(
+            functools.partial(_kernel_apply_master_vel, lr=lr,
+                              momentum=momentum),
+            (p2, master2, g2, vel2),
+            (_sds(p2), _sds(master2), _sds(vel2)),
+            {0: 0, 1: 1, 3: 2}, interpret=interpret, block_rows=block_rows)
     if vel2 is None:
         return _launch(functools.partial(_kernel_apply, lr=lr), (p2, g2),
                        jax.ShapeDtypeStruct(p2.shape, p2.dtype), {0: 0},
@@ -187,6 +284,24 @@ def _kernel_apply_worker(wid_ref, lr_ref, fac_ref, mom_ref, p_ref, g_ref,
     ov_ref[pl.ds(w, 1)] = v[None].astype(ov_ref.dtype)
 
 
+def _kernel_apply_worker_master(wid_ref, lr_ref, fac_ref, mom_ref, p_ref,
+                                m_ref, g_ref, v_ref, op_ref, om_ref, ov_ref):
+    # mixed-precision twin of _kernel_apply_worker: the update runs on the
+    # f32 master (same float op order), the same launch writes master +
+    # rounded store-dtype shadow.  The shadow input is only an alias donor.
+    del p_ref
+    w = wid_ref[0]
+    m = m_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    v = v_ref[pl.ds(w, 1)][0].astype(jnp.float32)
+    v = mom_ref[0] * v + g
+    d = -lr_ref[0] * v
+    m = m + fac_ref[0] * d
+    om_ref[...] = m.astype(om_ref.dtype)
+    op_ref[...] = m.astype(op_ref.dtype)
+    ov_ref[pl.ds(w, 1)] = v[None].astype(ov_ref.dtype)
+
+
 def _worker_block_rows(rows: int, n_workers: int, block_rows: int) -> int:
     """Row-tile height for the gridded worker kernel: the velocity block
     carries ALL workers' rows for the tile, so halve the tile until the
@@ -201,7 +316,8 @@ def _worker_block_rows(rows: int, n_workers: int, block_rows: int) -> int:
 
 
 def dbl_apply_worker_flat2d(p2, g2, vel3, wid, lr, factor,
-                            momentum, *, interpret: Optional[bool] = None,
+                            momentum, *, master2=None,
+                            interpret: Optional[bool] = None,
                             block_rows: int = BLOCK_ROWS):
     """ONE fused per-event PS update over the whole flat store.
 
@@ -215,7 +331,10 @@ def dbl_apply_worker_flat2d(p2, g2, vel3, wid, lr, factor,
         v'[wid] = m·v[wid] + g;   d = −lr·v'[wid];   w' = w + f·d
 
     Returns ``(params, velocity)``; both alias their inputs, and only
-    worker ``wid``'s velocity row block is rewritten.
+    worker ``wid``'s velocity row block is rewritten.  With ``master2``
+    (mixed precision) the update runs on the f32 master and the same
+    launch also writes the rounded ``p2``-dtype shadow — returns
+    ``(params, master, velocity)``, all aliased.
     """
     global _LAUNCHES
     _LAUNCHES += 1
@@ -224,19 +343,28 @@ def dbl_apply_worker_flat2d(p2, g2, vel3, wid, lr, factor,
     as1 = lambda x, dt: jnp.reshape(jnp.asarray(x), (1,)).astype(dt)
     scalars = (as1(wid, jnp.int32), as1(lr, jnp.float32),
                as1(factor, jnp.float32), as1(momentum, jnp.float32))
-    out_shape = (jax.ShapeDtypeStruct(p2.shape, p2.dtype),
-                 jax.ShapeDtypeStruct(vel3.shape, vel3.dtype))
-    aliases = {4: 0, 6: 1}
+    if master2 is None:
+        kernel = _kernel_apply_worker
+        bufs = (p2, g2, vel3)
+        out_shape = (_sds(p2), _sds(vel3))
+        aliases = {4: 0, 6: 1}
+        vel_pos = 2                    # vel3's index within bufs
+    else:
+        kernel = _kernel_apply_worker_master
+        bufs = (p2, master2, g2, vel3)
+        out_shape = (_sds(p2), _sds(master2), _sds(vel3))
+        aliases = {4: 0, 5: 1, 7: 2}
+        vel_pos = 3
     rows = p2.shape[0]
     n_workers = vel3.shape[0]
     # whole-buffer only while the STACKED velocity block also fits the
     # budget — rows alone says nothing once n_workers grows, and the
     # worker-sweep regime is exactly where it does
     if rows <= MAX_WHOLE_ROWS and n_workers * rows <= 2 * MAX_WHOLE_ROWS:
-        return pl.pallas_call(_kernel_apply_worker, out_shape=out_shape,
+        return pl.pallas_call(kernel, out_shape=out_shape,
                               interpret=interpret,
                               input_output_aliases=aliases)(
-            *scalars, p2, g2, vel3)
+            *scalars, *bufs)
     block = _worker_block_rows(rows, n_workers, block_rows)
     if rows % block:
         raise ValueError(
@@ -246,15 +374,19 @@ def dbl_apply_worker_flat2d(p2, g2, vel3, wid, lr, factor,
     sspec = pl.BlockSpec((1,), lambda i: (0,))
     pspec = pl.BlockSpec((block, LANE), lambda i: (i, 0))
     vspec = pl.BlockSpec((n_workers, block, LANE), lambda i: (0, i, 0))
+    bspecs = [pspec] * len(bufs)
+    bspecs[vel_pos] = vspec
+    ospecs = tuple(pspec for _ in out_shape[:-1]) + (vspec,)
     return pl.pallas_call(
-        _kernel_apply_worker, grid=(rows // block,),
-        in_specs=[sspec] * 4 + [pspec, pspec, vspec],
-        out_specs=(pspec, vspec), out_shape=out_shape,
+        kernel, grid=(rows // block,),
+        in_specs=[sspec] * 4 + bspecs,
+        out_specs=ospecs, out_shape=out_shape,
         interpret=interpret, input_output_aliases=aliases)(
-        *scalars, p2, g2, vel3)
+        *scalars, *bufs)
 
 
-def dbl_apply_worker_xla(p2, g2, vel3, wid, lr, factor, momentum):
+def dbl_apply_worker_xla(p2, g2, vel3, wid, lr, factor, momentum,
+                         master2=None):
     """XLA-elementwise form of ``dbl_apply_worker_flat2d`` — the same
     per-event PS update as a handful of fused elementwise ops instead of a
     ``pallas_call``:
@@ -285,6 +417,16 @@ def dbl_apply_worker_xla(p2, g2, vel3, wid, lr, factor, momentum):
     except NotImplementedError:      # vmapped (batched candidate replay)
         pass
     vrow = jax.lax.dynamic_slice_in_dim(vel3, wid, 1, 0)[0]
+    if master2 is not None:
+        # mixed precision: update the f32 master, re-round the shadow —
+        # same op order as _kernel_apply_worker_master
+        g32 = g2.astype(jnp.float32)
+        v = momentum * vrow + g32
+        d = -lr * v
+        master2 = master2 + factor * d
+        p2 = master2.astype(p2.dtype)
+        vel3 = jax.lax.dynamic_update_slice_in_dim(vel3, v[None], wid, 0)
+        return p2, master2, vel3
     v = momentum * vrow + g2
     d = -lr * v
     p2 = p2 + factor * d

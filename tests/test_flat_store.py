@@ -447,6 +447,188 @@ def test_worker_kernel_gridded_path():
     assert np.array_equal(np.asarray(nV[1]), np.asarray(V[1]))
 
 
+# ----------------------- mixed precision (bf16 store) -----------------------
+def test_bf16_spec_geometry_and_master():
+    """bf16 store rows pad to the 16-row bf16 sublane tile (so the f32
+    master sharing the geometry is trivially 8-row aligned), per-row bytes
+    halve, and ``ravel_master`` yields the f32 twin in the SAME shape."""
+    tree = mixed_tree()
+    s16 = flat_spec(tree, jnp.bfloat16)
+    s32 = flat_spec(tree)
+    assert s16.rows % 16 == 0
+    assert s16.store_bytes == s16.rows * LANE * 2
+    assert s16.store_bytes < s32.store_bytes
+    m = s16.ravel_master(tree)
+    assert m.shape == s16.shape and m.dtype == jnp.float32
+    b = s16.ravel(tree)
+    assert b.shape == s16.shape and b.dtype == jnp.bfloat16
+    # at model scale the padding washes out and the halving is (near) exact
+    params = models.init_params(tiny_cfg(), jax.random.PRNGKey(0))
+    sp16, sp32 = flat_spec(params, jnp.bfloat16), flat_spec(params)
+    assert sp16.store_bytes <= 0.55 * sp32.store_bytes
+
+
+def test_bf16_store_roundtrip_within_rounding():
+    """ravel/unravel through the bf16 store preserves leaf dtypes and lands
+    within one bf16 rounding step (rel 2^-8); the pre-existing bf16 leaf
+    round-trips bit-for-bit (no double rounding)."""
+    tree = mixed_tree()
+    spec = flat_spec(tree, jnp.bfloat16)
+    back = spec.unravel(spec.ravel(tree))
+    la, lb = jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(back)
+    for a, b in zip(la, lb):
+        assert np.asarray(b).dtype == np.asarray(a).dtype
+        assert np.allclose(np.asarray(a, np.float32),
+                           np.asarray(b, np.float32),
+                           rtol=2 ** -8, atol=1e-6)
+    # the bf16 leaf was already representable: exact round trip
+    assert np.array_equal(np.asarray(tree["blocks"][1]["bias"]),
+                          np.asarray(back["blocks"][1]["bias"]))
+
+
+def test_f32_store_bit_identical_with_bf16_spec_alive():
+    """The f32 store is untouched by the precision knob: same spec object
+    as before (bf16 specs cache under a different key), bit-for-bit codec,
+    and ``ravel_master`` IS ``ravel`` on an f32 spec."""
+    tree = mixed_tree()
+    s32 = flat_spec(tree)
+    s16 = flat_spec(tree, jnp.bfloat16)
+    assert s16 is not s32
+    assert flat_spec(tree) is s32            # cache key unchanged
+    assert tree_equal(tree, s32.unravel(s32.ravel(tree)))
+    assert np.array_equal(np.asarray(s32.ravel(tree)),
+                          np.asarray(s32.ravel_master(tree)))
+
+
+def test_flatparams_bf16_carries_exact_master():
+    """FlatParams over a bf16 spec holds the bf16 buffer AND the f32
+    master; ``to_tree`` reads the master, so values survive bit-for-bit."""
+    tree = mixed_tree()
+    fp = FlatParams.from_tree(tree, spec=flat_spec(tree, jnp.bfloat16))
+    assert fp.buf.dtype == jnp.bfloat16
+    assert fp.master is not None and fp.master.dtype == jnp.float32
+    assert tree_equal(tree, fp.to_tree())
+    # the shadow is exactly the rounded master
+    assert np.array_equal(np.asarray(fp.buf),
+                          np.asarray(fp.master.astype(jnp.bfloat16)))
+
+
+def test_checkpoint_bytes_identical_bf16_store(tmp_path):
+    """Checkpoint files are byte-identical across pytree / f32 store / bf16
+    store — the master is the value of record, so the store dtype never
+    leaks into the file format."""
+    import hashlib
+
+    from repro.checkpoint.ckpt import save_checkpoint
+
+    tree = mixed_tree()
+    f1 = save_checkpoint(str(tmp_path / "a"), 1, {"params": tree})
+    f2 = save_checkpoint(str(tmp_path / "b"), 1, {"params": FlatParams.from_tree(
+        tree, spec=flat_spec(tree, jnp.bfloat16))})
+    sha = lambda f: hashlib.sha256(open(f, "rb").read()).hexdigest()
+    assert sha(f1) == sha(f2)
+
+
+def test_mixed_apply_kernel_matches_oracle():
+    """The mixed apply kernel updates the f32 master with the f32 math
+    (oracle up to FMA ULPs) and writes the shadow as EXACTLY the re-rounded
+    master — with and without the folded velocity."""
+    rng = np.random.RandomState(0)
+    rows = 16
+    m2 = jnp.asarray(rng.randn(rows, LANE), jnp.float32)
+    p2 = m2.astype(jnp.bfloat16)
+    g2 = jnp.asarray(rng.randn(rows, LANE), jnp.float32)
+    v2 = jnp.asarray(rng.randn(rows, LANE), jnp.float32)
+
+    np2, nm2 = dbl_apply_flat2d(p2, g2, lr=0.05, master2=m2, interpret=True)
+    assert np2.dtype == jnp.bfloat16 and nm2.dtype == jnp.float32
+    assert np.allclose(np.asarray(nm2), np.asarray(m2 - 0.05 * g2),
+                       atol=1e-6)
+    assert np.array_equal(np.asarray(np2),
+                          np.asarray(nm2.astype(jnp.bfloat16)))
+
+    np2, nm2, nv2 = dbl_apply_flat2d(p2, g2, lr=0.05, vel2=v2, momentum=0.9,
+                                     master2=m2, interpret=True)
+    exp_v = 0.9 * v2 + g2
+    assert np.allclose(np.asarray(nv2), np.asarray(exp_v), atol=1e-6)
+    assert np.allclose(np.asarray(nm2), np.asarray(m2 - 0.05 * exp_v),
+                       atol=1e-6)
+    assert np.array_equal(np.asarray(np2),
+                          np.asarray(nm2.astype(jnp.bfloat16)))
+
+
+def test_mixed_merge_kernel_matches_f32_master_path():
+    """The mixed merge kernel's master trajectory matches the pure-f32
+    merge kernel run on the master directly; the shadow is its rounding."""
+    rng = np.random.RandomState(1)
+    rows = 16
+    m2 = jnp.asarray(rng.randn(rows, LANE), jnp.float32)
+    p2 = m2.astype(jnp.bfloat16)
+    gl = jnp.asarray(rng.randn(rows, LANE), jnp.float32)
+    gs = jnp.asarray(rng.randn(rows, LANE), jnp.float32)
+    np2, nm2 = dbl_merge_flat2d(p2, gl, gs, factor=0.7, lr=0.05,
+                                master2=m2, interpret=True)
+    ref = dbl_merge_flat2d(m2, gl, gs, factor=0.7, lr=0.05, interpret=True)
+    assert np.allclose(np.asarray(nm2), np.asarray(ref), atol=1e-6)
+    assert np.array_equal(np.asarray(np2),
+                          np.asarray(nm2.astype(jnp.bfloat16)))
+
+
+def test_single_launch_mixed_phase_scan():
+    """The mixed (shadow, master) phase scan still traces exactly ONE
+    pallas_call per server update — mixed precision costs zero launches."""
+    from repro.engine.steps import make_fused_phase_scan
+
+    cfg = tiny_cfg()
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    spec = flat_spec(params, jnp.bfloat16)
+    phase_fn = make_fused_phase_scan(cfg, LAYOUT, spec, lr=0.05,
+                                     interpret=True)
+    tok = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0,
+                             cfg.vocab_size)
+    batches = {"tokens": jnp.stack([tok] * 3),
+               "labels": jnp.stack([tok] * 3)}
+    carry = (spec.ravel(params), spec.ravel_master(params))
+    before = dbl_merge.launch_count()
+    jax.make_jaxpr(lambda p2, b: phase_fn(p2, None, b, None))(carry, batches)
+    assert dbl_merge.launch_count() - before == 1
+
+
+def test_mixed_worker_kernel_matches_xla_under_jit():
+    """Mixed worker kernel (trace executor) == the XLA reference form
+    bit-for-bit under jit (the FMA contraction matches there), touching
+    only worker wid's velocity block."""
+    from repro.kernels.dbl_merge import (dbl_apply_worker_flat2d,
+                                         dbl_apply_worker_xla)
+
+    rng = np.random.RandomState(2)
+    rows = 16
+    m2 = jnp.asarray(rng.randn(rows, LANE), jnp.float32)
+    p2 = m2.astype(jnp.bfloat16)
+    g2 = jnp.asarray(rng.randn(rows, LANE), jnp.float32)
+    V = jnp.asarray(rng.randn(3, rows, LANE), jnp.float32)
+
+    @jax.jit
+    def run_pallas(p2, m2, g2, V):
+        return dbl_apply_worker_flat2d(p2, g2, V, 1, 0.05, 0.7, 0.9,
+                                       master2=m2, interpret=True)
+
+    @jax.jit
+    def run_xla(p2, m2, g2, V):
+        return dbl_apply_worker_xla(p2, g2, V, 1, 0.05, 0.7, 0.9,
+                                    master2=m2)
+
+    pp, pm, pv = run_pallas(p2, m2, g2, V)
+    xp, xm, xv = run_xla(p2, m2, g2, V)
+    assert pp.dtype == jnp.bfloat16 and pm.dtype == jnp.float32
+    assert np.array_equal(np.asarray(pm), np.asarray(xm))
+    assert np.array_equal(np.asarray(pp), np.asarray(xp))
+    assert np.array_equal(np.asarray(pv), np.asarray(xv))
+    # untouched workers' velocity rows pass through bit-for-bit
+    assert np.array_equal(np.asarray(pv[0]), np.asarray(V[0]))
+    assert np.array_equal(np.asarray(pv[2]), np.asarray(V[2]))
+
+
 def test_trace_executor_one_launch_per_event():
     """The compiled chunk runner traces exactly one worker-kernel launch
     per event when update="pallas"."""

@@ -1,0 +1,166 @@
+"""Mixed-precision runs (bf16 flat store + fused f32 master update):
+engine smoke vs f32, the ``RunConfig(precision=...)`` facade over both
+backends, and the validation fences that keep bf16 off paths that would
+silently train f32."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import models
+from repro.api import RunConfig, ScheduleSpec, run
+from repro.cluster.backend import PsSimBackend
+from repro.configs import get_config, reduced
+from repro.core.spmd_dual_batch import SpmdDualBatch
+from repro.core.time_model import LinearTimeModel
+from repro.engine.engine import TrainEngine
+from repro.engine.phases import Phase
+from repro.optim import sgd_momentum
+
+
+def tiny_cfg():
+    return reduced(get_config("phi3-mini-3.8b"), layers=1, d_model=64,
+                   n_heads=2, vocab=64)
+
+
+LAYOUT = SpmdDualBatch(global_batch=8, n_workers=4, n_small=2,
+                       small_valid=1, factor_small=0.8)
+
+
+def token_batch_fn(cfg, seed=0):
+    rng = np.random.RandomState(seed)
+    cache = {}
+
+    def batch_fn(phase, gstep):
+        if gstep not in cache:
+            tok = rng.randint(0, cfg.vocab_size,
+                              (phase.batch_size, phase.input_size))
+            cache[gstep] = {"tokens": jnp.asarray(tok),
+                            "labels": jnp.asarray(tok)}
+        return cache[gstep]
+    return batch_fn
+
+
+def max_diff(a, b):
+    return max(float(jnp.max(jnp.abs(x.astype(jnp.float32)
+                                     - y.astype(jnp.float32))))
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+def _phases():
+    return [Phase(input_size=16, n_steps=4, lr=0.02, batch_size=8,
+                  layout=LAYOUT)]
+
+
+# ----------------------------- engine smoke ---------------------------------
+def test_engine_bf16_tracks_f32_within_band():
+    """Same schedule, same data, precision f32 vs bf16: the bf16 run stays
+    inside the rounding band of the f32 one (only the stored weights are
+    rounded — the master update is full-precision f32), and the
+    materialized params come back in the ORIGINAL leaf dtypes."""
+    cfg = tiny_cfg()
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    out = {}
+    for prec in ("f32", "bf16"):
+        opt = sgd_momentum(0.0)
+        engine = TrainEngine(cfg, opt, sgd_server=True, interpret=True,
+                             precision=prec)
+        p0 = jax.tree_util.tree_map(jnp.copy, params)
+        p, _, hist = engine.run(_phases(), p0, opt.init(p0),
+                                token_batch_fn(cfg), log_every=1)
+        assert hist and all(np.isfinite(h["loss"]) for h in hist)
+        out[prec] = (p, hist)
+    p32, h32 = out["f32"]
+    p16, h16 = out["bf16"]
+    for a, b in zip(jax.tree_util.tree_leaves(p32),
+                    jax.tree_util.tree_leaves(p16)):
+        assert b.dtype == a.dtype            # master of record, not bf16
+    assert max_diff(p32, p16) < 0.05
+    for a, b in zip(h32, h16):
+        assert abs(a["loss"] - b["loss"]) < 0.1
+
+
+# --------------------------- RunConfig facade --------------------------------
+def test_runconfig_bf16_spmd_e2e():
+    cfg = tiny_cfg()
+    spec = ScheduleSpec(scheme="dbl", input_size=16, batch_size=8,
+                        dataset_size=512, n_workers=4, n_small=2, k=1.05,
+                        n_steps=4, lr=0.01, tm_a=1.0, tm_b=24.6)
+    engine = TrainEngine(cfg, sgd_momentum(0.0), sgd_server=True,
+                         interpret=True, precision="bf16")
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    res = run(spec, RunConfig(backend="spmd", precision="bf16"),
+              init_params=params, engine=engine, plane=token_batch_fn(cfg))
+    leaves = jax.tree_util.tree_leaves(res.params)
+    assert leaves and all(np.all(np.isfinite(np.asarray(l, np.float32)))
+                          for l in leaves)
+
+
+def test_runconfig_bf16_ps_sim_e2e():
+    """Traced PS-sim replay under precision="bf16": the run completes,
+    decays the quadratic toward zero, and tracks the f32 replay within
+    the bf16 rounding band."""
+    def fns_factory(input_size):
+        def grad_fn(p, b):
+            return p                         # grad of 0.5*||p||^2
+
+        def data_fn(rng, wid, bsz):
+            return jnp.zeros((bsz, 1), jnp.float32)
+        return grad_fn, data_fn, None
+
+    spec = ScheduleSpec(scheme="dbl", input_size=16, batch_size=8,
+                        dataset_size=64, n_workers=2, n_small=1, k=1.05,
+                        epochs=1, lr=0.1, sync="bsp", tm_a=1.0, tm_b=24.6)
+    out = {}
+    for prec in ("f32", "bf16"):
+        res = run(spec,
+                  RunConfig(backend="ps_sim", traced=True, trace_chunk=4,
+                            momentum=0.0, precision=prec),
+                  init_params={"x": jnp.ones(16)}, fns_factory=fns_factory)
+        out[prec] = np.asarray(res.params["x"], np.float32)
+    assert np.all(np.isfinite(out["bf16"]))
+    assert np.max(np.abs(out["bf16"])) < 1.0     # decayed from 1.0
+    assert np.allclose(out["bf16"], out["f32"], atol=1e-2)
+
+
+# --------------------------- validation fences -------------------------------
+def test_precision_validation_errors():
+    cfg = tiny_cfg()
+    with pytest.raises(ValueError, match="precision"):
+        TrainEngine(cfg, sgd_momentum(0.0), sgd_server=True,
+                    precision="fp8")
+    # bf16 demands the fused scan path — anything that bypasses it errors
+    # at construction, not silently training f32
+    for kw in ({"scan_loop": False}, {"fused_merge": False},
+               {"mesh": object()}):
+        with pytest.raises(ValueError, match="bf16"):
+            TrainEngine(cfg, sgd_momentum(0.0), sgd_server=True,
+                        precision="bf16", **kw)
+    # the per-event PS loop has no flat store to hold a shadow in
+    with pytest.raises(ValueError, match="traced=True"):
+        PsSimBackend(lambda s: (None, None, None),
+                     tm=LinearTimeModel(a=1.0, b=24.6), precision="bf16")
+    # the facade refuses a config/engine precision mismatch (the engine
+    # owns the compiled caches)
+    engine = TrainEngine(cfg, sgd_momentum(0.0), sgd_server=True,
+                         interpret=True)
+    spec = ScheduleSpec(scheme="dbl", input_size=16, batch_size=8,
+                        dataset_size=512, n_workers=4, n_small=2,
+                        n_steps=2, tm_a=1.0, tm_b=24.6)
+    with pytest.raises(ValueError, match="precision"):
+        run(spec, RunConfig(backend="spmd", precision="bf16"),
+            init_params=None, engine=engine, plane=lambda *a: None)
+
+
+def test_bf16_rejects_non_fused_phase_at_runtime():
+    """A schedule whose phases bypass the fused scan (weighted kind) must
+    error at run time under bf16, not silently train f32."""
+    cfg = tiny_cfg()
+    engine = TrainEngine(cfg, sgd_momentum(0.0), sgd_server=True,
+                         interpret=True, precision="bf16")
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    baseline = Phase(input_size=16, n_steps=1, lr=0.01, batch_size=8)
+    with pytest.raises(ValueError, match="bf16"):
+        engine.run([baseline], params, sgd_momentum(0.0).init(params),
+                   token_batch_fn(cfg))

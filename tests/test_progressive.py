@@ -64,6 +64,8 @@ def test_cost_reduction_matches_paper_ratio():
     assert c_cpl / c_base == pytest.approx(expected, rel=1e-6)
 
 
+@pytest.mark.filterwarnings(
+    "ignore:hybrid_schedule is deprecated:DeprecationWarning")
 def test_hybrid_schedule_composition():
     tm = LinearTimeModel(a=1.0, b=24.57)
     phases = hybrid_schedule(tm, stages=(80, 40, 20),
