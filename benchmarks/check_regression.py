@@ -102,6 +102,24 @@ def _gates(step_tol: float) -> list:
         ("engine/step_fused_bf16_us", "<=", "engine/step_fused_us", noise,
          "the mixed bf16-store fused step costs more than the noise band "
          "over the f32 fused step"),
+        # hard: continuous batching's whole reason to exist — on the
+        # mixed-length Poisson workload it must beat the static batch's
+        # max(gen)-per-batch drain by 1.5x in token throughput
+        ("serve/cb_speedup", ">=", 1.5, 1.0,
+         "continuous batching lost its 1.5x token-throughput win over "
+         "the static-batch baseline on the mixed-length workload"),
+        # the page-table indirection may cost at most the noise band over
+        # the contiguous cache's decode step
+        ("serve/paged_decode_step_us", "<=", "serve/contig_decode_step_us",
+         noise,
+         "the paged decode step costs more than the noise band over the "
+         "contiguous-cache decode step"),
+        # hard and exact: both serve backends share one attention-math
+        # path, so paged f32 logits are BIT-identical to contiguous —
+        # any nonzero diff means the addressing changed the math
+        ("serve/paged_parity_maxdiff", "<=", 0.0, 1.0,
+         "paged-KV logits diverged from the contiguous cache "
+         "(f32 bit-parity broken)"),
     ]
 
 

@@ -32,9 +32,10 @@ def main(argv=None) -> None:
 
     from benchmarks import (autotune_pareto, engine_step, fig13_max_batch,
                             phase_transition, ps_sim_throughput, roofline,
-                            sync_compare, table3_update_factor,
-                            table4_time_prediction, table5_worker_sweep,
-                            table8_hybrid_cifar, table10_hybrid_imagenet)
+                            serve_throughput, sync_compare,
+                            table3_update_factor, table4_time_prediction,
+                            table5_worker_sweep, table8_hybrid_cifar,
+                            table10_hybrid_imagenet)
     mods = {
         "table4": table4_time_prediction,   # time model first (cheap)
         "engine": engine_step,              # fused vs unfused server update
@@ -51,8 +52,11 @@ def main(argv=None) -> None:
     if args.full:
         # the autotuner search validates ~9 runs; full tier only
         mods["autotune"] = autotune_pareto
+        # serving engine: continuous-vs-static + paged-KV gates; full tier
+        mods["serve"] = serve_throughput
     if args.only:
-        mods = {args.only: {**mods, "autotune": autotune_pareto}[args.only]}
+        mods = {args.only: {**mods, "autotune": autotune_pareto,
+                            "serve": serve_throughput}[args.only]}
 
     print("name,us_per_call,derived")
     for name, mod in mods.items():

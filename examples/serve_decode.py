@@ -1,6 +1,8 @@
 """Serving example: batched generation across architecture families —
 KV-cache decode (dense/GQA + sliding window), recurrent-state decode
-(Mamba2 hybrid, RWKV6), and enc-dec decode with a stubbed audio frontend.
+(Mamba2 hybrid, RWKV6), enc-dec decode with a stubbed audio frontend,
+and the continuous-batching engine (paged KV cache + slot scheduler)
+on an attention arch.
 
   PYTHONPATH=src python examples/serve_decode.py
 """
@@ -13,6 +15,7 @@ from repro import models
 from repro.configs import get_config, reduced
 from repro.launch.serve import generate
 from repro.models import encdec
+from repro.serve import PageSpec, ServeEngine, synthetic_workload
 
 rng = jax.random.PRNGKey(0)
 
@@ -21,9 +24,27 @@ for arch in ("gemma3-4b", "zamba2-2.7b", "rwkv6-7b"):
     params = models.init_params(cfg, rng)
     prompts = jax.random.randint(rng, (4, 16), 0, cfg.vocab_size)
     t0 = time.time()
+    # attention archs prefill the whole prompt in one chunked call;
+    # recurrent archs step token-by-token automatically
     out = generate(cfg, params, prompts, gen=12, max_seq=28)
     print(f"{arch:<22} {4 * 12 / (time.time() - t0):6.1f} tok/s  "
           f"out shape {out.shape}")
+
+# continuous batching: requests arrive over time, join mid-flight as pages
+# free up, and leave individually — no static batch to drain.
+cfg = reduced(get_config("gemma3-4b"))
+params = models.init_params(cfg, rng)
+engine = ServeEngine(cfg, params,
+                     spec=PageSpec(page_len=16, pages_per_slot=4, n_slots=4),
+                     prefill_chunk=16)
+reqs = synthetic_workload(0, 12, vocab=cfg.vocab_size, prompt_lens=(4, 16),
+                          gen_short=(4, 8), gen_long=(16, 24))
+t0 = time.time()
+recs = engine.serve(reqs)
+n_tok = sum(len(r.tokens) for r in recs)
+print(f"{'gemma3 (continuous)':<22} {n_tok / (time.time() - t0):6.1f} tok/s  "
+      f"{len(recs)} reqs, mean TTFT "
+      f"{1e3 * sum(r.ttft_s for r in recs) / len(recs):.0f}ms")
 
 # enc-dec: precompute encoder output from stubbed frame embeddings, then
 # decode with self-attn KV cache + cross-attention.

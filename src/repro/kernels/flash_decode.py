@@ -68,10 +68,49 @@ def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                        / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
+def resolve_impl(impl: str) -> str:
+    """``"auto"`` -> the Pallas kernel on TPU, an XLA reference off-TPU —
+    the same policy as ``cluster.trace.resolve_update``: interpret-mode
+    Pallas is a semantics fallback, not a fast path, so CPU serving
+    benches / CI must measure the real XLA work, not emulation overhead."""
+    if impl != "auto":
+        return impl
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _xla_decode(q, k_cache, v_cache, pos, *, window: int = 0):
+    """XLA form of the decode attention (same math/mask as the kernel)."""
+    b, h, _, hd = q.shape
+    kvh, s = k_cache.shape[1], k_cache.shape[2]
+    n_rep = h // kvh
+    k = jnp.repeat(k_cache, n_rep, axis=1).astype(jnp.float32)
+    v = jnp.repeat(v_cache, n_rep, axis=1).astype(jnp.float32)
+    sc = jnp.einsum("bhqd,bhsd->bhqs", q.astype(jnp.float32), k) * hd ** -0.5
+    idx = jnp.arange(s)
+    valid = idx <= pos
+    if window > 0:
+        valid = jnp.logical_and(valid, idx > pos - window)
+    sc = jnp.where(valid[None, None, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, -1)
+    return jnp.einsum("bhqs,bhsd->bqhd", p, v).transpose(0, 2, 1, 3) \
+        .astype(q.dtype)
+
+
 def flash_decode(q, k_cache, v_cache, pos, *, window: int = 0,
-                 block_k: int = 512, interpret: bool = False):
+                 block_k: int = 512, interpret: bool | None = None,
+                 impl: str = "auto"):
     """q: (B, H, 1, hd); k_cache/v_cache: (B, KV, S, hd); pos: scalar int32
-    index of the newest token.  Returns (B, H, 1, hd)."""
+    index of the newest token.  Returns (B, H, 1, hd).
+
+    ``impl``: "pallas" (the kernel), "xla" (reference implementation), or
+    "auto" — kernel on TPU, XLA elsewhere (CPU-honest: emulating the
+    kernel with ``interpret=True`` measures the interpreter, not the
+    attention).  Passing ``interpret`` explicitly forces the Pallas path
+    with that interpret setting (kernel-semantics tests)."""
+    if interpret is None:
+        if resolve_impl(impl) == "xla":
+            return _xla_decode(q, k_cache, v_cache, pos, window=window)
+        interpret = False
     b, h, _, hd = q.shape
     kvh, s = k_cache.shape[1], k_cache.shape[2]
     n_rep = h // kvh
@@ -104,3 +143,137 @@ def flash_decode(q, k_cache, v_cache, pos, *, window: int = 0,
         ],
         interpret=interpret,
     )(pos_arr, q, k_cache, v_cache)
+
+
+# ------------------------- paged decode --------------------------------
+def _paged_kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, page_len: int, n_pages_slot: int,
+                  window: int, scale: float):
+    pi = pl.program_id(2)
+    si = pl.program_id(0)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = len_ref[si]
+    k_start = pi * page_len       # LOGICAL position of this page's 1st token
+
+    def compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # (1, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)            # (page_len, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, page_len), 1)
+        valid = kpos <= pos
+        if window > 0:
+            valid = jnp.logical_and(valid, kpos > pos - window)
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        m_ref[...] = m_cur
+        acc_ref[...] = acc_ref[...] * alpha \
+            + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+
+    # pages wholly beyond the slot's live range contribute nothing; skip
+    pl.when(k_start <= pos)(compute)
+
+    @pl.when(pi == n_pages_slot - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_decode_paged(q, k_pages, v_pages, page_table, lengths, *,
+                       window: int = 0, interpret: bool | None = None,
+                       impl: str = "auto"):
+    """Gather-free paged decode attention: one query token per slot over a
+    block-paged KV pool, the page table fed to the kernel as a
+    scalar-prefetch operand so each KV page streams straight from its pool
+    row (``BlockSpec`` index maps read the table — no materialized gather).
+
+    q:          (S, H, 1, hd)         one new token per serving slot
+    k/v_pages:  (P, page_len, KV, hd) the page pool (one layer's pages)
+    page_table: (S, PP) int32         pool page id of each logical page
+    lengths:    (S,) int32            per-slot position of the newest token
+                                      (mask: logical index <= lengths[s])
+
+    Off-TPU (``impl="auto"``) this dispatches to the XLA reference
+    (``paged_decode_ref``) — gather + masked softmax, honest CPU work —
+    mirroring ``flash_decode``; ``interpret=True`` forces the kernel under
+    the Pallas interpreter (semantics tests).
+    """
+    ns, h, _, hd = q.shape
+    n_pages, page_len, kvh, _ = k_pages.shape
+    pp = page_table.shape[1]
+    n_rep = h // kvh
+    if interpret is None:
+        if resolve_impl(impl) == "xla":
+            return paged_decode_ref(q, k_pages, v_pages, page_table, lengths,
+                                    window=window)
+        interpret = False
+    scale = hd ** -0.5
+    table = jnp.asarray(page_table, jnp.int32)
+    lens = jnp.asarray(lengths, jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(ns, h, pp),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, hd),
+                         lambda si, hi, pi, tbl, ln: (si, hi, 0, 0)),
+            pl.BlockSpec((1, page_len, 1, hd),
+                         lambda si, hi, pi, tbl, ln:
+                         (tbl[si, pi], 0, hi // n_rep, 0)),
+            pl.BlockSpec((1, page_len, 1, hd),
+                         lambda si, hi, pi, tbl, ln:
+                         (tbl[si, pi], 0, hi // n_rep, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, hd),
+                               lambda si, hi, pi, tbl, ln: (si, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_kernel, page_len=page_len, n_pages_slot=pp,
+                          window=window, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((ns, h, 1, hd), q.dtype),
+        interpret=interpret,
+    )(table, lens, q, k_pages, v_pages)
+
+
+def paged_decode_ref(q, k_pages, v_pages, page_table, lengths, *,
+                     window: int = 0):
+    """XLA reference for ``flash_decode_paged``: gather the slot's pages
+    into logical order, then the exact contiguous decode-attention math —
+    the off-TPU serving path (``repro.serve.paged`` builds its batched
+    step on the same gather-then-attend form)."""
+    ns, h, _, hd = q.shape
+    page_len, kvh = k_pages.shape[1], k_pages.shape[2]
+    pp = page_table.shape[1]
+    s = pp * page_len
+    k = k_pages[page_table].reshape(ns, s, kvh, hd)     # (S, pp*pl, KV, hd)
+    v = v_pages[page_table].reshape(ns, s, kvh, hd)
+    n_rep = h // kvh
+    k = jnp.repeat(k.transpose(0, 2, 1, 3), n_rep, axis=1)  # (S, H, s, hd)
+    v = jnp.repeat(v.transpose(0, 2, 1, 3), n_rep, axis=1)
+    sc = jnp.einsum("bhqd,bhsd->bhqs", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) * hd ** -0.5
+    idx = jnp.arange(s)
+    valid = idx[None, :] <= lengths[:, None]                # (S_slots, s)
+    if window > 0:
+        valid = jnp.logical_and(valid,
+                                idx[None, :] > lengths[:, None] - window)
+    sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, -1)
+    return jnp.einsum("bhqs,bhsd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

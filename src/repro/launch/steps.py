@@ -51,19 +51,25 @@ def make_prefill_step(cfg: ModelConfig):
 
 
 def make_decode_step(cfg: ModelConfig, shape: InputShape | None = None):
-    """(params, cache, tokens, pos) -> (logits (B, V), new cache)."""
+    """(params, cache, tokens, pos) -> (logits (B, V), new cache).
+
+    tokens may be a chunk (B, T >= 1): attention archs accept whole-prompt
+    or chunked prefill through the same step (one compiled call instead of
+    O(P) dispatches), and the returned logits are for the LAST chunk
+    position — identical to the classic T=1 decode when T=1.
+    """
     window = effective_window(cfg, shape) if shape is not None else 0
 
     if cfg.encoder_layers:
         def decode(params, cache, tokens, pos):
             logits, cache = models.decode_step(params, cfg, cache, tokens,
                                                pos, window=window)
-            return logits[:, 0], cache
+            return logits[:, -1], cache
         return decode
 
     cfg2 = with_window_override(cfg, shape) if shape is not None else cfg
 
     def decode(params, cache, tokens, pos):
         logits, cache = models.decode_step(params, cfg2, cache, tokens, pos)
-        return logits[:, 0], cache
+        return logits[:, -1], cache
     return decode

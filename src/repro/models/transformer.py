@@ -316,16 +316,17 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
 
 
 def _decode_attn_layer(p, x, cfg, cache_k, cache_v, window, pos):
-    b = x.shape[0]
+    b, t = x.shape[:2]
     xin = rms_norm(x, p["ln1"], cfg.norm_eps)
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    positions = jnp.broadcast_to(pos + jnp.arange(t, dtype=jnp.int32),
+                                 (b, t))
     q, k, v = attn_project_qkv(p["attn"], xin, positions, cfg)
     cache_k = jax.lax.dynamic_update_slice(
         cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0))
     cache_v = jax.lax.dynamic_update_slice(
         cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0))
     o = decode_attention_dyn(q, cache_k, cache_v, pos, window)
-    h = x + o.reshape(b, 1, cfg.n_heads * cfg.head_dim) @ p["attn"]["wo"]
+    h = x + o.reshape(b, t, cfg.n_heads * cfg.head_dim) @ p["attn"]["wo"]
     hin = rms_norm(h, p["ln2"], cfg.norm_eps)
     if cfg.moe:
         y, _ = moe_ffn(p["moe"], hin, cfg.moe, dropless=True)
@@ -335,8 +336,11 @@ def _decode_attn_layer(p, x, cfg, cache_k, cache_v, window, pos):
 
 
 def decode_attention_dyn(q, k_cache, v_cache, pos, window):
-    """decode_attention with a traced per-layer window scalar."""
-    b, _, h, hd = q.shape
+    """decode_attention with a traced per-layer window scalar and a chunk
+    of T >= 1 query tokens at positions pos..pos+T-1 (T=1 is the classic
+    single-token decode; T>1 is the batched-prefill / chunked-prefill form
+    — causality within the chunk falls out of the same position mask)."""
+    b, t, h, hd = q.shape
     s, kvh = k_cache.shape[1], k_cache.shape[2]
     n_rep = h // kvh
     from repro.models.attention import gqa_expand, NEG_INF
@@ -345,20 +349,32 @@ def decode_attention_dyn(q, k_cache, v_cache, pos, window):
     qf = q.astype(jnp.float32) * hd ** -0.5
     scores = jnp.einsum("bqhd,bshd->bhqs", qf, k)
     idx = jnp.arange(s)
-    valid = idx <= pos
+    qpos = pos + jnp.arange(t, dtype=jnp.int32)              # (T,)
+    valid = idx[None, :] <= qpos[:, None]                    # (T, S)
     valid = jnp.logical_and(
-        valid, jnp.where(window > 0, idx > pos - window, True))
-    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+        valid, jnp.where(window > 0, idx[None, :] > qpos[:, None] - window,
+                         True))
+    scores = jnp.where(valid[None, None, :, :], scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1)
     return jnp.einsum("bhqs,bshd->bqhd", p, v).astype(q.dtype)
 
 
 def decode_step(params, cfg: ModelConfig, caches, tokens, pos,
                 *, embeddings=None):
-    """One-token decode.  tokens: (B, 1); pos: scalar index of the new token.
+    """Decode a chunk of T >= 1 tokens against the cache.
 
-    Returns (logits (B, 1, V), new caches).
+    tokens: (B, T); pos: scalar index of the FIRST new token (the chunk
+    occupies cache positions pos..pos+T-1).  T=1 is the classic one-token
+    decode step; T>1 is batched prefill (one compiled call filling the KV
+    cache for a whole prompt, O(1) dispatches instead of O(P)) and the
+    serving engine's chunked prefill.  Chunks need KV-cache semantics, so
+    recurrent segments (mamba2 / rwkv6) accept only T=1 — their prefill
+    stays the stepping path.
+
+    Returns (logits (B, T, V), new caches).
     """
+    chunk = (jnp.shape(tokens)[1] if embeddings is None
+             else jnp.shape(embeddings)[1])
     cdt = dtype_of(cfg.compute_dtype)
     if embeddings is None:
         x = params["embed"][tokens].astype(cdt)
@@ -388,6 +404,10 @@ def decode_step(params, cfg: ModelConfig, caches, tokens, pos,
                 body, x, (sp, cache["k"], cache["v"], windows))
             new_caches.append({"k": ck, "v": cv})
         elif seg.kind == MAMBA2:
+            if chunk != 1:
+                raise ValueError("chunked decode (T>1) requires attention "
+                                 "segments; mamba2 decode steps one token")
+
             def body(x, xs):
                 p, h, conv = xs
                 xin = rms_norm(x, p["ln1"], cfg.norm_eps)
@@ -398,6 +418,10 @@ def decode_step(params, cfg: ModelConfig, caches, tokens, pos,
                                         (sp, cache["h"], cache["conv"]))
             new_caches.append({"h": h, "conv": conv})
         elif seg.kind == RWKV6:
+            if chunk != 1:
+                raise ValueError("chunked decode (T>1) requires attention "
+                                 "segments; rwkv6 decode steps one token")
+
             def body(x, xs):
                 p, wkv, sh_t, sh_c = xs
                 xin = rms_norm(x, p["ln1"], cfg.norm_eps)

@@ -1,0 +1,23 @@
+"""Serving stack: paged KV cache + continuous-batching slot scheduler.
+
+  ``repro.serve.paged``      the block-paged KV pool (flat-store tiling
+                             rules generalized to KV pages) and the
+                             batched paged / contiguous decode-step
+                             builders that share one attention math path
+  ``repro.serve.scheduler``  host-side hook-driven serve loop (the
+                             cluster event-loop idiom): request admission
+                             with page-budget accounting, slot
+                             assignment, chunked prefill interleaved with
+                             decode, eviction returning pages
+  ``repro.serve.engine``     ``ServeEngine`` — the device half behind the
+                             scheduler hooks: compiled step cache keyed
+                             on (slot bucket, chunk), donated cache
+                             carries, per-request latency records
+"""
+from repro.serve.engine import ServeEngine, ServeRecord
+from repro.serve.paged import PageSpec
+from repro.serve.scheduler import (PagePool, Request, run_serve_loop,
+                                   synthetic_workload)
+
+__all__ = ["ServeEngine", "ServeRecord", "PageSpec", "PagePool", "Request",
+           "run_serve_loop", "synthetic_workload"]

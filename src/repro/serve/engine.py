@@ -1,0 +1,251 @@
+"""ServeEngine: the device half of the serving stack.
+
+The scheduler (``serve.scheduler.run_serve_loop``) decides WHAT happens
+each tick; this engine is the hook object that makes it happen on
+device.  It owns the KV state (paged pool or contiguous baseline — both
+built by ``serve.paged``), the host-side mirrors the scheduler's
+decisions key into (page-table rows, per-slot lengths, last sampled
+token), and a compile cache of jitted serve steps.
+
+One step family serves everything: decode is the ``(m, 1)`` shape,
+chunked prefill the ``(1, C)`` shape, so the compile cache is keyed on
+``(kind, m, T)`` — ``compile_log`` records exactly which shapes
+compiled, and steady-state serving stops adding entries after the first
+few ticks.  Cache carries are donated, so each step updates the KV pool
+in place instead of doubling resident memory.
+
+Paged slot-bucketing (``slot_buckets``): the page-table indirection
+makes the decode batch independent of slot ids — k in-flight requests
+can be compacted into the next power-of-two rows instead of always
+paying ``n_slots``.  The contiguous baseline can't do this (its cache
+rows ARE the slots), which is one of the two structural wins the
+throughput bench measures (the other is admission without batch drain).
+
+Per-request latency is recorded as wall-clock ``ServeRecord``s: TTFT
+(admission → first sampled token) and per-token timestamps.  Sampling is
+greedy argmax, synced to host every tick — deliberately blocking, and
+identically blocking for every backend, so throughput comparisons stay
+honest.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve import paged as pg
+from repro.serve.scheduler import PagePool, Request, run_serve_loop
+
+
+@dataclass
+class ServeRecord:
+    """Per-request outcome + latency trace (wall-clock seconds)."""
+    rid: int
+    prompt_len: int
+    max_new: int
+    slot: int = -1
+    pages: Tuple[int, ...] = ()
+    tokens: List[int] = field(default_factory=list)
+    t_admit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+    token_times: List[float] = field(default_factory=list)
+    logits: List[np.ndarray] = field(default_factory=list)
+
+    @property
+    def ttft_s(self) -> float:
+        """Admission -> first token (prefill latency the request saw)."""
+        return self.t_first - self.t_admit
+
+    @property
+    def tpot_s(self) -> float:
+        """Mean inter-token time after the first."""
+        if len(self.token_times) < 2:
+            return 0.0
+        gaps = np.diff(np.asarray(self.token_times))
+        return float(np.mean(gaps))
+
+
+class ServeEngine:
+    """Continuous-batching (or static) serving over one model.
+
+    ``backend="paged"`` runs on the page pool; ``backend="contig"`` is
+    the contiguous-cache baseline with identical logical extents — the
+    two produce bit-identical f32 logits (see ``serve.paged``).
+    """
+
+    def __init__(self, cfg, params, *, spec: Optional[pg.PageSpec] = None,
+                 backend: str = "paged", prefill_chunk: int = 16,
+                 slot_buckets: Optional[bool] = None,
+                 eos_id: Optional[int] = None, record_logits: bool = False):
+        pg.attention_segments(cfg)            # servable arch or raise
+        if backend not in ("paged", "contig"):
+            raise ValueError(f"backend must be 'paged' or 'contig': {backend!r}")
+        self.cfg, self.params = cfg, params
+        self.spec = spec if spec is not None else pg.PageSpec()
+        self.backend = backend
+        self.prefill_chunk = int(prefill_chunk)
+        if slot_buckets is None:
+            slot_buckets = backend == "paged"
+        if slot_buckets and backend == "contig":
+            raise ValueError("slot_buckets needs the page-table indirection; "
+                             "contiguous cache rows ARE the slots")
+        self.slot_buckets = bool(slot_buckets)
+        self.eos_id = eos_id
+        self.record_logits = bool(record_logits)
+
+        if backend == "paged":
+            self._step_fn = jax.jit(
+                pg.make_serve_step(cfg, self.spec, "paged"),
+                donate_argnums=(1,))
+            self._row_fn = self._step_fn       # paged handles any m via table
+        else:
+            self._step_fn = jax.jit(
+                pg.make_serve_step(cfg, self.spec, "contig",
+                                   gather_rows=False), donate_argnums=(1,))
+            self._row_fn = jax.jit(
+                pg.make_serve_step(cfg, self.spec, "contig",
+                                   gather_rows=True), donate_argnums=(1,))
+        self.compile_log: List[tuple] = []     # (kind, m, T) first-use order
+        self._seen: set = set()
+        self.log: List[tuple] = []
+        self.wall_s = 0.0
+        self._reset()
+
+    # ------------------------------------------------------------------
+    def _reset(self) -> None:
+        spec, cfg = self.spec, self.cfg
+        self._caches = (pg.init_paged_cache(cfg, spec)
+                        if self.backend == "paged"
+                        else pg.init_contig_cache(cfg, spec))
+        self._table = np.zeros((spec.n_slots, spec.pages_per_slot), np.int32)
+        self._lengths = np.zeros((spec.n_slots,), np.int32)
+        self._tok = np.zeros((spec.n_slots,), np.int32)
+        self._slot_rid: Dict[int, int] = {}
+        self.records: Dict[int, ServeRecord] = {}
+        self.stats = {"prefill_calls": 0, "decode_calls": 0, "decode_rows": 0}
+
+    def _call(self, kind: str, rows, lengths, active, tokens):
+        key = (kind, tokens.shape[0], tokens.shape[1])
+        if key not in self._seen:
+            self._seen.add(key)
+            self.compile_log.append(key)
+        fn = self._row_fn if kind == "rows" else self._step_fn
+        logits, self._caches = fn(self.params, self._caches, rows,
+                                  lengths, active, tokens)
+        return logits
+
+    # ------------------------ scheduler hooks -------------------------
+    def admit(self, slot: int, req: Request, pages: Tuple[int, ...]) -> None:
+        self._table[slot] = 0
+        self._table[slot, :len(pages)] = pages
+        self._lengths[slot] = 0
+        self._tok[slot] = 0
+        self._slot_rid[slot] = req.rid
+        self.records[req.rid] = ServeRecord(
+            rid=req.rid, prompt_len=len(req.tokens), max_new=req.max_new,
+            slot=slot, pages=tuple(pages), t_admit=time.perf_counter())
+
+    def prefill(self, slot: int, req: Request, chunk: Sequence[int],
+                pos: int, last: bool) -> None:
+        c = self.prefill_chunk
+        toks = np.zeros((1, c), np.int32)
+        toks[0, :len(chunk)] = chunk           # pad tail: masked, then
+        if self.backend == "paged":            # overwritten by decode
+            rows, kind = self._table[slot:slot + 1], "step"
+        else:
+            rows, kind = np.asarray([slot], np.int32), "rows"
+        logits = self._call(kind, rows, np.asarray([pos], np.int32),
+                            np.ones((1,), np.int32), toks)
+        self._lengths[slot] = pos + len(chunk)
+        self.stats["prefill_calls"] += 1
+        if last:
+            lrow = logits[0, len(chunk) - 1]
+            tok = int(jnp.argmax(lrow))
+            now = time.perf_counter()
+            rec = self.records[req.rid]
+            rec.t_first = now
+            rec.tokens.append(tok)
+            rec.token_times.append(now)
+            if self.record_logits:
+                rec.logits.append(np.asarray(lrow, np.float32))
+            self._tok[slot] = tok
+
+    def decode(self, slots: Tuple[int, ...]) -> None:
+        spec = self.spec
+        if self.slot_buckets:
+            m = 1
+            while m < len(slots):
+                m <<= 1
+            m = min(m, spec.n_slots)
+            rowmap = list(enumerate(slots))    # (row, slot): compacted
+            rows = np.zeros((m, spec.pages_per_slot), np.int32)
+            lengths = np.zeros((m,), np.int32)
+            active = np.zeros((m,), np.int32)
+            toks = np.zeros((m, 1), np.int32)
+            for row, slot in rowmap:
+                rows[row] = self._table[slot]
+                lengths[row] = self._lengths[slot]
+                toks[row, 0] = self._tok[slot]
+                active[row] = 1
+        else:
+            rowmap = [(s, s) for s in slots]   # rows ARE slots
+            rows = (self._table.copy() if self.backend == "paged"
+                    else np.arange(spec.n_slots, dtype=np.int32))
+            lengths = self._lengths.copy()
+            active = np.zeros((spec.n_slots,), np.int32)
+            active[list(slots)] = 1
+            toks = self._tok[:, None].copy()
+        logits = self._call("step", rows, lengths, active, toks)
+        last = logits[:, -1, :]
+        sampled = np.asarray(jnp.argmax(last, axis=-1))
+        now = time.perf_counter()
+        for row, slot in rowmap:
+            rec = self.records[self._slot_rid[slot]]
+            tok = int(sampled[row])
+            self._lengths[slot] += 1
+            self._tok[slot] = tok
+            rec.tokens.append(tok)
+            rec.token_times.append(now)
+            if self.record_logits:
+                rec.logits.append(np.asarray(last[row], np.float32))
+        self.stats["decode_calls"] += 1
+        self.stats["decode_rows"] += int(toks.shape[0])
+
+    def evict(self, slot: int, req: Request) -> None:
+        rec = self.records[req.rid]
+        rec.t_done = time.perf_counter()
+        self._table[slot] = 0
+        self._slot_rid.pop(slot, None)
+
+    def finished(self, slot: int, req: Request) -> bool:
+        if self.eos_id is None:
+            return False
+        rec = self.records[req.rid]
+        return bool(rec.tokens) and rec.tokens[-1] == self.eos_id
+
+    # ------------------------------------------------------------------
+    def serve(self, requests: Sequence[Request], *,
+              policy: str = "continuous",
+              static_batch: Optional[int] = None) -> List[ServeRecord]:
+        """Run every request to completion; returns records sorted by rid.
+
+        Reuses compiled steps across calls (``compile_log`` persists);
+        KV state and latency records reset per call.
+        """
+        self._reset()
+        pool = PagePool(self.spec.n_pages)
+        t0 = time.perf_counter()
+        self.log = run_serve_loop(
+            requests, self.spec, self, prefill_chunk=self.prefill_chunk,
+            policy=policy, static_batch=static_batch, pool=pool)
+        self.wall_s = time.perf_counter() - t0
+        return [self.records[r.rid]
+                for r in sorted(requests, key=lambda r: r.rid)]
+
+    def generated_tokens(self) -> int:
+        return sum(len(r.tokens) for r in self.records.values())

@@ -1,0 +1,279 @@
+"""Continuous-batching slot scheduler: a host-side, hook-driven serve loop.
+
+Same shape as the cluster simulator's event loop
+(``cluster.simulator.run_event_loop``): the schedule itself is a pure
+host-side pass — admission, slot assignment, page-budget accounting,
+prefill/decode interleaving, eviction — while all device work hides
+behind caller-supplied hooks.  Because the timeline never depends on
+*which* tokens the model produces (absent an early-``finished`` signal),
+the whole schedule is deterministic given the request list, and can be
+tested with stub hooks that never touch a device.
+
+One *tick* is the scheduling quantum: admit what fits, run at most one
+chunked-prefill call (the large-batch, compute-bound regime), then one
+batched decode call over every in-flight slot (the small-batch,
+latency-bound regime).  That interleaving is the serving-side mirror of
+the paper's dual-batch insight — two batch regimes sharing one run,
+trading aggregate throughput against per-request latency.
+
+Policies:
+
+  ``continuous``  admit head-of-line requests the moment a slot AND the
+                  page budget allow — new requests join mid-flight.
+  ``static``      the classic baseline: admit a full batch only when the
+                  previous batch has fully drained (and hold admission
+                  until ``static_batch`` requests have arrived, unless no
+                  more ever will).
+
+``PagePool`` is the accounting half of the paged KV cache: a free list
+of physical page ids, LIFO reuse (so re-admitted requests land on
+maximally scrambled pages — exactly what the paged-vs-contiguous parity
+tests want to stress), and loud failure on leaks / double-frees /
+over-allocation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serve.paged import PageSpec
+
+
+@dataclass(frozen=True)
+class Request:
+    """One serving request: a prompt, a generation budget, an arrival tick."""
+    rid: int
+    tokens: Tuple[int, ...]
+    max_new: int
+    arrival: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "tokens", tuple(int(t) for t in self.tokens))
+        if not self.tokens:
+            raise ValueError(f"request {self.rid}: empty prompt")
+        if self.max_new < 1:
+            raise ValueError(f"request {self.rid}: max_new must be >= 1")
+
+
+class PagePool:
+    """Physical-page allocator for the paged KV cache.
+
+    Pages are ids into the pool's leading axis.  The free list is LIFO:
+    freshly freed pages are handed out first, so slots that churn end up
+    with physically scrambled, non-contiguous page sets.  Every
+    inconsistency raises — the property tests drive random
+    alloc/free interleavings through ``audit``.
+    """
+
+    def __init__(self, n_pages: int):
+        if n_pages < 1:
+            raise ValueError("pool needs at least one page")
+        self.n_pages = int(n_pages)
+        self._free: List[int] = list(range(self.n_pages))
+        self._held: Dict[Any, Tuple[int, ...]] = {}
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def holds(self, rid) -> Tuple[int, ...]:
+        return self._held.get(rid, ())
+
+    def can_alloc(self, n: int) -> bool:
+        return 0 < n <= len(self._free)
+
+    def alloc(self, rid, n: int) -> Tuple[int, ...]:
+        if rid in self._held:
+            raise ValueError(f"request {rid} already holds pages")
+        if n < 1:
+            raise ValueError(f"request {rid}: must allocate >= 1 page")
+        if n > len(self._free):
+            raise ValueError(
+                f"request {rid}: wants {n} pages, pool has {len(self._free)}")
+        pages = tuple(self._free[:n])
+        del self._free[:n]
+        self._held[rid] = pages
+        return pages
+
+    def free(self, rid) -> Tuple[int, ...]:
+        if rid not in self._held:
+            raise KeyError(f"request {rid} holds no pages (double free?)")
+        pages = self._held.pop(rid)
+        self._free[:0] = pages            # LIFO: churn scrambles placement
+        return pages
+
+    def audit(self) -> None:
+        """Raise unless every page is accounted for exactly once."""
+        seen = list(self._free)
+        for pages in self._held.values():
+            seen.extend(pages)
+        if sorted(seen) != list(range(self.n_pages)):
+            raise AssertionError(
+                f"page accounting broken: free={sorted(self._free)} "
+                f"held={self._held}")
+
+
+@dataclass
+class _Slot:
+    req: Request
+    pages: Tuple[int, ...]
+    prefilled: int = 0
+    generated: int = 0
+    state: str = "prefill"               # "prefill" -> "decode"
+
+
+def run_serve_loop(requests: Sequence[Request], spec: PageSpec, hooks, *,
+                   prefill_chunk: int = 16, policy: str = "continuous",
+                   static_batch: Optional[int] = None,
+                   pool: Optional[PagePool] = None,
+                   max_ticks: int = 100_000) -> List[tuple]:
+    """Drive every request to completion; return the schedule log.
+
+    ``hooks`` supplies the device half (all optional except ``decode``
+    in spirit — stubs are fine, the loop never inspects return values
+    except ``finished``):
+
+      admit(slot, req, pages)                 slot bound, table row built
+      prefill(slot, req, chunk, pos, last)    one (1, C) chunk; ``chunk``
+                                              is the REAL token list (the
+                                              engine pads to C); on
+                                              ``last`` the first new
+                                              token is sampled
+      decode(slots)                           one batched step over every
+                                              in-flight slot
+      evict(slot, req)                        done — before pages return
+      finished(slot, req) -> bool             early stop (EOS); absent or
+                                              False keeps length-only
+                                              semantics (deterministic
+                                              timeline)
+
+    The log is a list of tuples — ``("admit", tick, rid, slot, pages)``,
+    ``("prefill", tick, rid, slot, pos, n, last)``, ``("decode", tick,
+    slots)``, ``("evict", tick, rid, slot)`` — and is the determinism
+    test's subject: same requests, same spec ⇒ same log, bit for bit.
+    """
+    if policy not in ("continuous", "static"):
+        raise ValueError(f"unknown policy {policy!r}")
+    pool = pool if pool is not None else PagePool(spec.n_pages)
+    batch_n = static_batch or spec.n_slots
+    for r in requests:
+        need = spec.pages_needed(len(r.tokens), r.max_new, prefill_chunk)
+        if need > spec.pages_per_slot:
+            raise ValueError(
+                f"request {r.rid}: needs {need} pages "
+                f"(prompt {len(r.tokens)} + {r.max_new} new @ chunk "
+                f"{prefill_chunk}) > pages_per_slot={spec.pages_per_slot}")
+
+    pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
+    queue: List[Request] = []
+    slots: List[Optional[_Slot]] = [None] * spec.n_slots
+    log: List[tuple] = []
+    finished_hook = getattr(hooks, "finished", None)
+    tick = 0
+
+    def _admit(req: Request) -> None:
+        slot = next(i for i, s in enumerate(slots) if s is None)
+        pages = pool.alloc(req.rid,
+                           spec.pages_needed(len(req.tokens), req.max_new,
+                                             prefill_chunk))
+        slots[slot] = _Slot(req, pages)
+        hooks.admit(slot, req, pages)
+        log.append(("admit", tick, req.rid, slot, pages))
+
+    while pending or queue or any(s is not None for s in slots):
+        if tick >= max_ticks:
+            raise RuntimeError(f"serve loop exceeded {max_ticks} ticks")
+
+        while pending and pending[0].arrival <= tick:
+            queue.append(pending.pop(0))
+
+        # -- admission ---------------------------------------------------
+        if policy == "continuous":
+            # head-of-line FCFS: never skip past a request that doesn't
+            # fit — determinism and no starvation of large requests
+            while queue and any(s is None for s in slots):
+                need = spec.pages_needed(len(queue[0].tokens),
+                                         queue[0].max_new, prefill_chunk)
+                if not pool.can_alloc(need):
+                    break
+                _admit(queue.pop(0))
+        else:
+            # static: wait for the previous batch to fully drain, then
+            # for a full batch (unless no more requests will ever arrive)
+            if all(s is None for s in slots) and queue and (
+                    len(queue) >= batch_n or not pending):
+                for _ in range(min(batch_n, len(queue), spec.n_slots)):
+                    _admit(queue.pop(0))
+
+        # -- one chunked-prefill call (large-batch regime) ---------------
+        for slot, s in enumerate(slots):
+            if s is None or s.state != "prefill":
+                continue
+            chunk = list(s.req.tokens[s.prefilled:s.prefilled + prefill_chunk])
+            pos = s.prefilled
+            s.prefilled += len(chunk)
+            last = s.prefilled >= len(s.req.tokens)
+            hooks.prefill(slot, s.req, chunk, pos, last)
+            log.append(("prefill", tick, s.req.rid, slot, pos,
+                        len(chunk), last))
+            if last:
+                s.state = "decode"
+                s.generated = 1          # sampled from the prefill logits
+            break                        # at most one prefill per tick
+
+        # -- one batched decode call (small-batch regime) ----------------
+        live = tuple(i for i, s in enumerate(slots)
+                     if s is not None and s.state == "decode"
+                     and s.generated < s.req.max_new)
+        if live:
+            hooks.decode(live)
+            log.append(("decode", tick, live))
+            for i in live:
+                slots[i].generated += 1
+
+        # -- completion / eviction ---------------------------------------
+        for slot, s in enumerate(slots):
+            if s is None or s.state != "decode":
+                continue
+            done = s.generated >= s.req.max_new
+            if not done and finished_hook is not None and slot in live:
+                done = bool(finished_hook(slot, s.req))
+            if done:
+                hooks.evict(slot, s.req)
+                pool.free(s.req.rid)
+                slots[slot] = None
+                log.append(("evict", tick, s.req.rid, slot))
+        tick += 1
+
+    pool.audit()
+    return log
+
+
+def synthetic_workload(seed: int, n_requests: int, *, vocab: int = 512,
+                       prompt_lens: Tuple[int, int] = (4, 24),
+                       gen_short: Tuple[int, int] = (4, 10),
+                       gen_long: Tuple[int, int] = (32, 48),
+                       p_long: float = 0.2,
+                       arrival_rate: float = 0.5) -> List[Request]:
+    """Mixed-length Poisson workload (deterministic in ``seed``).
+
+    Generation lengths are a heavy-tailed mixture — mostly short, a
+    ``p_long`` fraction long — which is precisely the regime where static
+    batching pays ``max(gen)`` per batch while continuous batching pays
+    roughly the mean.  Arrivals are Poisson with ``arrival_rate``
+    requests per scheduler tick.
+    """
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / max(arrival_rate, 1e-9), size=n_requests)
+    arrivals = np.floor(np.cumsum(gaps)).astype(int)
+    reqs = []
+    for i in range(n_requests):
+        p = int(rng.integers(prompt_lens[0], prompt_lens[1] + 1))
+        lo, hi = gen_long if rng.random() < p_long else gen_short
+        g = int(rng.integers(lo, hi + 1))
+        toks = rng.integers(0, vocab, size=p)
+        reqs.append(Request(rid=i, tokens=tuple(int(t) for t in toks),
+                            max_new=g, arrival=int(arrivals[i])))
+    return reqs
