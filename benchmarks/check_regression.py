@@ -120,6 +120,25 @@ def _gates(step_tol: float) -> list:
         ("serve/paged_parity_maxdiff", "<=", 0.0, 1.0,
          "paged-KV logits diverged from the contiguous cache "
          "(f32 bit-parity broken)"),
+        # hard: speculative decode's reason to exist — on the repetitive
+        # workload (briefly-trained Markov model, predictable greedy
+        # continuations) the (m, k+1) verify step must buy >= 1.3x token
+        # throughput over one-token decode
+        ("serve/spec_decode_speedup", ">=", 1.3, 1.0,
+         "speculative multi-token decode lost its 1.3x token-throughput "
+         "win over one-token decode on the repetitive workload"),
+        # hard and exact: greedy acceptance makes the speculative stream
+        # token-identical to one-token decode BY CONSTRUCTION — any
+        # nonzero value means acceptance/rollback bookkeeping broke
+        ("serve/spec_token_identity", "<=", 0.0, 1.0,
+         "speculative decode emitted different tokens than one-token "
+         "greedy decode (acceptance/rollback bookkeeping broken)"),
+        # hard: prefix-sharing admission must skip at least half of all
+        # prompt tokens on the shared-prefix workload (refcounted page
+        # mapping + COW boundary duplication)
+        ("serve/prefix_prefill_skip_frac", ">=", 0.5, 1.0,
+         "prefix sharing skipped under half the prompt tokens on the "
+         "shared-prefix workload"),
     ]
 
 

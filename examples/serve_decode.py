@@ -2,7 +2,8 @@
 KV-cache decode (dense/GQA + sliding window), recurrent-state decode
 (Mamba2 hybrid, RWKV6), enc-dec decode with a stubbed audio frontend,
 and the continuous-batching engine (paged KV cache + slot scheduler)
-on an attention arch.
+on an attention arch — plus the PR 9 additions: draft-free speculative
+decode, in-jit sampled decode, and COW prefix sharing.
 
   PYTHONPATH=src python examples/serve_decode.py
 """
@@ -15,7 +16,8 @@ from repro import models
 from repro.configs import get_config, reduced
 from repro.launch.serve import generate
 from repro.models import encdec
-from repro.serve import PageSpec, ServeEngine, synthetic_workload
+from repro.serve import (PageSpec, ServeEngine, repetitive_workload,
+                         shared_prefix_workload, synthetic_workload)
 
 rng = jax.random.PRNGKey(0)
 
@@ -45,6 +47,49 @@ n_tok = sum(len(r.tokens) for r in recs)
 print(f"{'gemma3 (continuous)':<22} {n_tok / (time.time() - t0):6.1f} tok/s  "
       f"{len(recs)} reqs, mean TTFT "
       f"{1e3 * sum(r.ttft_s for r in recs) / len(recs):.0f}ms")
+
+# speculative decode: per-slot n-gram prompt lookup drafts up to k tokens,
+# one batched (m, k+1) verify dispatch scores them, the longest greedy-
+# matching prefix is accepted — output is token-identical to one-token
+# decode, only the dispatch count changes.
+reqs = repetitive_workload(0, 8, vocab=cfg.vocab_size, prompt_len=24,
+                           gen=(24, 32))
+spc = ServeEngine(cfg, params,
+                  spec=PageSpec(page_len=16, pages_per_slot=4, n_slots=4),
+                  prefill_chunk=16, spec_k=3)
+t0 = time.time()
+recs = spc.serve(reqs)
+n_tok = sum(len(r.tokens) for r in recs)
+print(f"{'gemma3 (spec k=3)':<22} {n_tok / (time.time() - t0):6.1f} tok/s  "
+      f"accept rate {spc.accept_rate:.2f} "
+      f"({spc.stats['draft_accepted']}/{spc.stats['draft_proposed']} drafts, "
+      f"{spc.stats['spec_dispatches']} verify dispatches)")
+
+# sampled decode: temperature/top-k selection fused into the decode
+# dispatch, RNG keyed on (seed, request id, step) so replays are
+# deterministic regardless of batch composition. Greedy-only speculation
+# refuses this mode at construction.
+smp = ServeEngine(cfg, params,
+                  spec=PageSpec(page_len=16, pages_per_slot=4, n_slots=4),
+                  prefill_chunk=16, temperature=0.8, top_k=40, sample_seed=7)
+recs = smp.serve(reqs)
+print(f"{'gemma3 (T=0.8 k=40)':<22} sampled {len(recs)} reqs, "
+      f"first tokens {list(recs[0].tokens[:6])}")
+
+# COW prefix sharing: admission matches full KV pages of previously
+# admitted prompts, maps them into the new slot's page table (refcounted)
+# and skips their prefill; a shared boundary page is copy-on-write
+# duplicated before the first divergent write.
+shr_reqs = shared_prefix_workload(0, 10, vocab=cfg.vocab_size,
+                                  prefix_len=32, suffix_len=6, p_dup=0.4)
+shr = ServeEngine(cfg, params,
+                  spec=PageSpec(page_len=8, pages_per_slot=10, n_slots=4),
+                  prefill_chunk=16, prefix_share=True)
+recs = shr.serve(shr_reqs)
+print(f"{'gemma3 (prefix share)':<22} skipped "
+      f"{shr.prefill_skip_frac:.0%} of prompt prefill "
+      f"({shr.stats['prefill_skipped_tokens']}/{shr.stats['prompt_tokens']} "
+      f"tokens, {shr.stats['cow_copies']} COW copies)")
 
 # enc-dec: precompute encoder output from stubbed frame embeddings, then
 # decode with self-attn KV cache + cross-attention.

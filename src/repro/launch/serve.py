@@ -9,13 +9,20 @@ has no cache to chunk into.
 Continuous batching (``--engine continuous``) hands the request stream to
 ``repro.serve.ServeEngine``: paged KV cache, admission the moment pages
 free up, chunked prefill interleaved with in-flight decode.  Attention
-archs only.
+archs only.  ``--spec-k`` turns on draft-free speculative decode (n-gram
+prompt lookup, greedy only), ``--temperature``/``--top-k`` switch to
+in-jit sampled decode, and ``--prefix-share`` enables copy-on-write
+prefix sharing across admitted prompts.
 
 Usage (CPU, reduced config):
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-4b --reduced \
       --batch 4 --prompt-len 32 --gen 16
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-4b \
       --engine continuous --requests 16
+  PYTHONPATH=src python -m repro.launch.serve --engine continuous \
+      --workload repetitive --spec-k 3
+  PYTHONPATH=src python -m repro.launch.serve --engine continuous \
+      --workload shared-prefix --prefix-share
 """
 from __future__ import annotations
 
@@ -75,15 +82,30 @@ def generate(cfg, params, prompts, *, gen: int, max_seq: int, greedy=True,
 
 
 def _serve_continuous(cfg, params, args):
-    from repro.serve import PageSpec, ServeEngine, synthetic_workload
+    from repro.serve import (PageSpec, ServeEngine, repetitive_workload,
+                             shared_prefix_workload, synthetic_workload)
     spec = PageSpec(page_len=args.page_len, pages_per_slot=args.pages_per_slot,
                     n_slots=args.slots)
     engine = ServeEngine(cfg, params, spec=spec,
-                         prefill_chunk=args.prefill_chunk)
-    reqs = synthetic_workload(args.seed, args.requests,
-                              vocab=cfg.vocab_size,
-                              prompt_lens=(4, args.prompt_len),
-                              gen_long=(args.gen, args.gen + 8))
+                         prefill_chunk=args.prefill_chunk,
+                         spec_k=args.spec_k,
+                         temperature=args.temperature, top_k=args.top_k,
+                         sample_seed=args.seed,
+                         prefix_share=args.prefix_share)
+    if args.workload == "repetitive":
+        reqs = repetitive_workload(args.seed, args.requests,
+                                   vocab=cfg.vocab_size,
+                                   prompt_len=args.prompt_len,
+                                   gen=(args.gen, args.gen + 8))
+    elif args.workload == "shared-prefix":
+        reqs = shared_prefix_workload(args.seed, args.requests,
+                                      vocab=cfg.vocab_size,
+                                      gen=(args.gen, args.gen + 8))
+    else:
+        reqs = synthetic_workload(args.seed, args.requests,
+                                  vocab=cfg.vocab_size,
+                                  prompt_lens=(4, args.prompt_len),
+                                  gen_long=(args.gen, args.gen + 8))
     t0 = time.time()
     recs = engine.serve(reqs)
     dt = time.time() - t0
@@ -94,6 +116,18 @@ def _serve_continuous(cfg, params, args):
           f"{n_tok / dt:.1f} tok/s  mean TTFT {ttft * 1e3:.1f}ms "
           f"({engine.stats['decode_calls']} decode / "
           f"{engine.stats['prefill_calls']} prefill calls)")
+    if args.spec_k:
+        print(f"  speculative k={args.spec_k}: accept rate "
+              f"{engine.accept_rate:.3f} "
+              f"({engine.stats['draft_accepted']}/"
+              f"{engine.stats['draft_proposed']} drafts, "
+              f"{engine.stats['spec_dispatches']} verify dispatches)")
+    if args.prefix_share:
+        print(f"  prefix sharing: skipped "
+              f"{engine.prefill_skip_frac:.1%} of prompt tokens "
+              f"({engine.stats['prefill_skipped_tokens']}/"
+              f"{engine.stats['prompt_tokens']}, "
+              f"{engine.stats['cow_copies']} COW page copies)")
     return recs
 
 
@@ -115,6 +149,19 @@ def run(argv=None):
     ap.add_argument("--page-len", type=int, default=16)
     ap.add_argument("--pages-per-slot", type=int, default=8)
     ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--workload",
+                    choices=("synthetic", "repetitive", "shared-prefix"),
+                    default="synthetic")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decode: n-gram draft length "
+                         "(0 = one-token decode; greedy only)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy; "
+                         "incompatible with --spec-k)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k truncation for sampled decode (0 = full)")
+    ap.add_argument("--prefix-share", action="store_true",
+                    help="COW prefix sharing across admitted prompts")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)

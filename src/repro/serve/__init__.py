@@ -2,22 +2,37 @@
 
   ``repro.serve.paged``      the block-paged KV pool (flat-store tiling
                              rules generalized to KV pages) and the
-                             batched paged / contiguous decode-step
-                             builders that share one attention math path
+                             batched paged / contiguous step builders
+                             that share one attention math path — decode
+                             (m, 1), chunked prefill (1, C) and the
+                             speculative verify chunk (m, k+1); plus
+                             in-jit token selection (greedy / sampled)
+                             and the COW page-duplication dispatch
+  ``repro.serve.draft``      draft-model-free n-gram prompt lookup +
+                             greedy acceptance (pure host bookkeeping)
   ``repro.serve.scheduler``  host-side hook-driven serve loop (the
                              cluster event-loop idiom): request admission
-                             with page-budget accounting, slot
-                             assignment, chunked prefill interleaved with
-                             decode, eviction returning pages
+                             with page-budget accounting and prefix-
+                             sharing (refcounted pages, COW on boundary
+                             writes), slot assignment, chunked prefill
+                             interleaved with decode, eviction returning
+                             pages
   ``repro.serve.engine``     ``ServeEngine`` — the device half behind the
                              scheduler hooks: compiled step cache keyed
-                             on (slot bucket, chunk), donated cache
-                             carries, per-request latency records
+                             on (kind, m, T), donated cache carries,
+                             speculative draft→verify→accept decode,
+                             one-sync-per-tick token selection,
+                             per-request latency records
 """
+from repro.serve.draft import accepted_prefix_len, propose_ngram
 from repro.serve.engine import ServeEngine, ServeRecord
 from repro.serve.paged import PageSpec
-from repro.serve.scheduler import (PagePool, Request, run_serve_loop,
-                                   synthetic_workload)
+from repro.serve.scheduler import (PagePool, PrefixRegistry, Request,
+                                   repetitive_workload, run_serve_loop,
+                                   shared_prefix_workload, synthetic_workload)
 
-__all__ = ["ServeEngine", "ServeRecord", "PageSpec", "PagePool", "Request",
-           "run_serve_loop", "synthetic_workload"]
+__all__ = ["ServeEngine", "ServeRecord", "PageSpec", "PagePool",
+           "PrefixRegistry", "Request", "run_serve_loop",
+           "synthetic_workload", "repetitive_workload",
+           "shared_prefix_workload", "propose_ngram",
+           "accepted_prefix_len"]

@@ -30,8 +30,23 @@ logits are *bit-identical* in f32 when the logical extents match
 a HARD CI gate (`benchmarks/serve_throughput.py`).
 
 Steps are batched over ``m`` slot rows and ``T`` chunk tokens; one
-builder serves both decode ``(m, 1)`` and chunked prefill ``(1, C)``, so
-the engine's compile cache is keyed on ``(m, T)`` only.
+builder serves decode ``(m, 1)``, chunked prefill ``(1, C)`` AND the
+speculative verify chunk ``(m, k+1)`` — the engine's compile cache is
+keyed on ``(m, T)`` only.  ``active`` carries a per-row *valid token
+count* (0 = dead row): rows whose chunks are shorter than ``T`` write
+exactly their first ``active[i]`` positions to the KV cache, so a
+padded verify batch never scribbles junk past a slot's real draft
+length, and a rejected draft needs no cleanup — the junk positions the
+verify step *did* write (the accepted-prefix overshoot) are always
+rewritten by a later chunk before any query can attend to them
+(queries only see positions their own chunk or an earlier one wrote).
+
+``make_token_fn`` closes the host-sync gap: greedy argmax — or
+temperature/top-k sampling with counter-based per-request RNG streams
+keyed ``(seed, request, step)``, the DataPlane idiom — runs INSIDE the
+jitted step, so only an int32 token row crosses to host each tick
+instead of an ``(m, V)`` f32 logits block plus a separate argmax
+dispatch per call.
 """
 from __future__ import annotations
 
@@ -178,7 +193,9 @@ def make_serve_step(cfg: ModelConfig, spec: PageSpec,
                contig: (m,) int32 slot ids owning each batch row
       lengths  (m,) int32 — tokens already in each row's cache; the chunk
                occupies positions lengths[i] .. lengths[i] + T - 1
-      active   (m,) int32 — 0 rows compute junk but never write KV
+      active   (m,) int32 — per-row count of VALID chunk tokens: row i
+               writes KV only for chunk positions j < active[i] (0 rows
+               compute junk but never write).  Full-chunk rows pass T.
       tokens   (m, T) int32
 
     ``gather_rows`` (contig only): gather cache rows by slot id — needed
@@ -202,7 +219,8 @@ def make_serve_step(cfg: ModelConfig, spec: PageSpec,
     use_flash = paged and fd.resolve_impl("auto") == "pallas"
 
     def write_kv(ck, k, rows, positions, active):
-        ok = jnp.logical_and(active[:, None] > 0, positions < slot_tokens)
+        valid = jnp.arange(positions.shape[1])[None, :] < active[:, None]
+        ok = jnp.logical_and(valid, positions < slot_tokens)
         off = positions % page_len
         if paged:
             pi = jnp.take_along_axis(
@@ -264,3 +282,74 @@ def make_serve_step(cfg: ModelConfig, spec: PageSpec,
         return logits, new_caches
 
     return step
+
+
+# ------------------------- in-jit token selection --------------------------
+def make_token_fn(cfg: ModelConfig, spec: PageSpec, backend: str = "paged",
+                  *, gather_rows: bool = False, temperature: float = 0.0,
+                  top_k: int = 0, seed: int = 0):
+    """Serve step + in-jit token selection (the one-sync-per-tick contract).
+
+    Returns ``fn(params, caches, rows, lengths, active, tokens, rids,
+    steps0) -> (next_tokens (m, T) int32, logits (m, T, V), new caches)``.
+    The host pulls only ``next_tokens`` — an int32 row — per tick; logits
+    stay on device unless a caller explicitly materializes them
+    (``record_logits`` debugging / parity runs).
+
+    ``temperature == 0`` is greedy argmax — bit-identical to the host
+    argmax it replaces.  ``temperature > 0`` samples every chunk position
+    ``j`` of row ``i`` with the counter-based key ``fold_in(fold_in(
+    PRNGKey(seed), rids[i]), steps0[i] + j)``: keyed on *(seed, request,
+    generation step)* exactly like the DataPlane's ``(seed, phase,
+    worker, step)`` streams, so sampled runs replay bit-identically
+    regardless of batch composition, slot bucketing or admission policy.
+    ``top_k > 0`` keeps only the k highest logits (ties at the k-th value
+    survive) before the temperature-scaled categorical draw.
+    """
+    if temperature < 0.0:
+        raise ValueError(f"temperature must be >= 0: {temperature}")
+    if top_k < 0:
+        raise ValueError(f"top_k must be >= 0: {top_k}")
+    step = make_serve_step(cfg, spec, backend, gather_rows=gather_rows)
+    base_key = jax.random.PRNGKey(seed)
+
+    def fn(params, caches, rows, lengths, active, tokens, rids, steps0):
+        logits, caches = step(params, caches, rows, lengths, active, tokens)
+        if temperature == 0.0:
+            toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return toks, logits, caches
+
+        lo = logits.astype(jnp.float32)
+        if top_k > 0:
+            kth = jax.lax.top_k(lo, top_k)[0][..., -1:]
+            lo = jnp.where(lo >= kth, lo, NEG_INF)
+        lo = lo / temperature
+
+        def sample_row(lrow, rid, s0):      # lrow: (T, V)
+            kr = jax.random.fold_in(base_key, rid)
+            steps = s0 + jnp.arange(lrow.shape[0], dtype=jnp.int32)
+            keys = jax.vmap(lambda s: jax.random.fold_in(kr, s))(steps)
+            return jax.vmap(jax.random.categorical)(keys, lrow)
+
+        toks = jax.vmap(sample_row)(lo, rids, steps0).astype(jnp.int32)
+        return toks, logits, caches
+
+    return fn
+
+
+# ------------------------- copy-on-write page duplication ------------------
+def make_cow_copy(cfg: ModelConfig):
+    """One-dispatch page duplication for copy-on-write prefix sharing.
+
+    ``cow(caches, src, dst)`` copies page ``src`` onto page ``dst`` in
+    every attention layer's K and V pools (``src``/``dst`` are traced
+    scalars — one compile covers every COW event).  The shared reader
+    duplicates the boundary page *before* its first write into it; the
+    writer's original page is untouched, so both sequences keep exact
+    KV prefixes with no other data movement.
+    """
+    def cow(caches, src, dst):
+        return [{"k": c["k"].at[:, dst].set(c["k"][:, src]),
+                 "v": c["v"].at[:, dst].set(c["v"][:, src])}
+                for c in caches]
+    return cow

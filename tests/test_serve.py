@@ -106,7 +106,7 @@ class _StubHooks:
     """Device-free hooks: the schedule must be fully determined without
     ever looking at model output."""
 
-    def admit(self, slot, req, pages):
+    def admit(self, slot, req, pages, **kw):
         pass
 
     def prefill(self, slot, req, chunk, pos, last):

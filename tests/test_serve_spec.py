@@ -1,0 +1,366 @@
+"""Speculative decode + COW prefix sharing tests (PR 9).
+
+Two contracts with teeth:
+
+ * Greedy speculation is an OPTIMIZATION, never a behavior change — the
+   emitted token stream must be IDENTICAL to one-token decode on both
+   backends, through churn, forced mid-draft rejections, page-boundary
+   straddles and EOS landing inside an accepted draft.  (CI enforces the
+   same via the ``serve/spec_token_identity`` gate.)
+
+ * Prefix sharing moves page IDs, never token content — a shared-prefix
+   run emits the same per-request streams as an unshared one while
+   skipping most prefill work, and the refcounted pool stays consistent
+   under arbitrary share/release/free interleavings.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import transformer as tf
+from repro.serve import (PagePool, PageSpec, PrefixRegistry, Request,
+                         ServeEngine, accepted_prefix_len, propose_ngram,
+                         repetitive_workload, run_serve_loop,
+                         shared_prefix_workload, synthetic_workload)
+
+
+@pytest.fixture(scope="module")
+def gemma():
+    cfg = reduced(get_config("gemma3-4b"))
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+SPEC = dict(page_len=8, pages_per_slot=10, n_slots=2)
+
+
+def _toks(recs):
+    return {r.rid: tuple(r.tokens) for r in recs}
+
+
+def _rep_reqs(cfg, n=6):
+    return repetitive_workload(3, n, vocab=cfg.vocab_size, prompt_len=12,
+                               gen=(8, 14))
+
+
+# ------------------- draft proposal / acceptance units ---------------------
+def test_propose_ngram_and_accept():
+    hist = [5, 6, 7, 1, 2, 3, 9, 1, 2, 3]
+    # trigram (9, 1, 2)? no - longest suffix match is (1, 2, 3) seen at
+    # index 3, so the continuation after it (9, 1, 2, ...) gets proposed
+    d = propose_ngram(hist, 3, max_ngram=3)
+    assert d == [9, 1, 2]
+    assert propose_ngram([1, 2, 3], 4, max_ngram=3) == []   # no repeat
+    assert accepted_prefix_len([9, 1, 2], [9, 1, 2, 7]) == 3
+    assert accepted_prefix_len([9, 1, 2], [9, 4, 2, 7]) == 1
+    assert accepted_prefix_len([], [4]) == 0
+
+
+# ------------------- token identity: the hard contract ---------------------
+@pytest.mark.parametrize("backend", ["paged", "contig"])
+def test_spec_token_identity_under_churn(gemma, backend):
+    """spec_k=3 emits EXACTLY the one-token stream on both backends,
+    across a workload that recycles every slot of a 2-slot spec."""
+    cfg, params = gemma
+    spec = PageSpec(**SPEC)
+    reqs = _rep_reqs(cfg)
+    base = ServeEngine(cfg, params, spec=spec, backend=backend,
+                       prefill_chunk=8)
+    fast = ServeEngine(cfg, params, spec=spec, backend=backend,
+                       prefill_chunk=8, spec_k=3)
+    t0, t1 = _toks(base.serve(reqs)), _toks(fast.serve(reqs))
+    assert t0 == t1
+    assert fast.stats["spec_dispatches"] > 0
+    assert fast.stats["draft_proposed"] > 0
+
+
+def test_spec_identity_under_forced_rejection(gemma):
+    """A hostile draft_fn that always proposes wrong tokens exercises the
+    mid-draft rollback path every tick — identity must survive junk KV
+    written past the accepted prefix."""
+    cfg, params = gemma
+    spec = PageSpec(**SPEC)
+    reqs = _rep_reqs(cfg, n=4)
+    base = ServeEngine(cfg, params, spec=spec, prefill_chunk=8)
+    bad = ServeEngine(cfg, params, spec=spec, prefill_chunk=8, spec_k=3,
+                      draft_fn=lambda hist, n:
+                          [(hist[-1] + 1) % cfg.vocab_size] * n)
+    t0, t1 = _toks(base.serve(reqs)), _toks(bad.serve(reqs))
+    assert t0 == t1
+    # wrong-first-token drafts are (almost) never accepted, but every
+    # tick still pays one (m, k+1) verify dispatch: the losing regime
+    assert bad.stats["spec_dispatches"] > 0
+    assert bad.accept_rate < 0.5
+
+
+def test_spec_identity_across_page_boundaries(gemma):
+    """page_len=8 prompts + drafts that straddle page boundaries: the
+    rejected tail of a draft may land in a page the accepted prefix
+    doesn't touch — rollback must not corrupt either page."""
+    cfg, params = gemma
+    spec = PageSpec(page_len=8, pages_per_slot=8, n_slots=2)
+    reqs = [Request(rid=i, tokens=tuple(range(2 + i, 9 + i)), max_new=14,
+                    arrival=i) for i in range(4)]
+    base = ServeEngine(cfg, params, spec=spec, prefill_chunk=8)
+    fast = ServeEngine(cfg, params, spec=spec, prefill_chunk=8, spec_k=5)
+    assert _toks(base.serve(reqs)) == _toks(fast.serve(reqs))
+
+
+def test_eos_inside_accepted_draft(gemma):
+    """EOS landing mid-draft truncates the emitted run inclusively and
+    finishes the request early — identical to the one-token run."""
+    cfg, params = gemma
+    spec = PageSpec(**SPEC)
+    reqs = _rep_reqs(cfg, n=4)
+    probe = ServeEngine(cfg, params, spec=spec, prefill_chunk=8)
+    recs = probe.serve(reqs)
+    # pick an eos that actually occurs mid-stream in some request
+    eos = None
+    for r in recs:
+        for t in r.tokens[1:-1]:
+            eos = int(t)
+            break
+        if eos is not None:
+            break
+    assert eos is not None
+    base = ServeEngine(cfg, params, spec=spec, prefill_chunk=8, eos_id=eos)
+    fast = ServeEngine(cfg, params, spec=spec, prefill_chunk=8, eos_id=eos,
+                       spec_k=3)
+    t0, t1 = _toks(base.serve(reqs)), _toks(fast.serve(reqs))
+    assert t0 == t1
+    for r in fast.records.values():
+        assert eos not in r.tokens[:-1]       # truncated AT the eos
+
+
+def test_spec_never_overshoots_budget(gemma):
+    cfg, params = gemma
+    spec = PageSpec(**SPEC)
+    reqs = _rep_reqs(cfg)
+    fast = ServeEngine(cfg, params, spec=spec, prefill_chunk=8, spec_k=4)
+    for r in fast.serve(reqs):
+        assert len(r.tokens) == r.max_new     # exact, despite 4-token drafts
+
+
+def test_spec_compile_cache_bounded(gemma):
+    """Speculation adds at most ONE extra T value (spec_k + 1); a second
+    serve() reuses every compiled step."""
+    cfg, params = gemma
+    spec = PageSpec(**SPEC)
+    fast = ServeEngine(cfg, params, spec=spec, prefill_chunk=8, spec_k=3)
+    fast.serve(_rep_reqs(cfg, n=4))
+    t_values = {t for _, _, t in fast.compile_log}
+    assert t_values <= {1, 4, 8}              # decode, verify, prefill chunk
+    n = len(fast.compile_log)
+    fast.serve(_rep_reqs(cfg, n=4))
+    assert len(fast.compile_log) == n
+
+
+# ------------------- sampling: fused, keyed, fenced ------------------------
+def test_sampled_replay_deterministic_across_batching(gemma):
+    """RNG keyed (seed, rid, step): the same requests admitted in a
+    DIFFERENT batch composition (staggered vs simultaneous arrivals)
+    sample bit-identical per-request streams."""
+    cfg, params = gemma
+    spec = PageSpec(**SPEC)
+    reqs = _rep_reqs(cfg, n=4)
+    together = [Request(rid=r.rid, tokens=r.tokens, max_new=r.max_new,
+                        arrival=0) for r in reqs]
+    a = ServeEngine(cfg, params, spec=spec, prefill_chunk=8,
+                    temperature=0.8, top_k=32, sample_seed=11)
+    b = ServeEngine(cfg, params, spec=spec, prefill_chunk=8,
+                    temperature=0.8, top_k=32, sample_seed=11)
+    assert _toks(a.serve(reqs)) == _toks(b.serve(together))
+
+
+def test_sampled_seed_sensitivity(gemma):
+    cfg, params = gemma
+    spec = PageSpec(**SPEC)
+    reqs = _rep_reqs(cfg, n=4)
+    a = ServeEngine(cfg, params, spec=spec, prefill_chunk=8,
+                    temperature=0.9, sample_seed=0)
+    b = ServeEngine(cfg, params, spec=spec, prefill_chunk=8,
+                    temperature=0.9, sample_seed=1)
+    assert _toks(a.serve(reqs)) != _toks(b.serve(reqs))
+
+
+def test_sampling_and_sharing_fences(gemma):
+    cfg, params = gemma
+    with pytest.raises(ValueError, match="greedy-only"):
+        ServeEngine(cfg, params, spec_k=2, temperature=0.5)
+    with pytest.raises(ValueError, match="in-jit"):
+        ServeEngine(cfg, params, temperature=0.5, fused_sample=False)
+    with pytest.raises(ValueError, match="page-table"):
+        ServeEngine(cfg, params, backend="contig", prefix_share=True,
+                    slot_buckets=False)
+
+
+def test_fused_argmax_equals_host_argmax(gemma):
+    """One-sync fused selection is a transport change, not a math change."""
+    cfg, params = gemma
+    spec = PageSpec(**SPEC)
+    reqs = _rep_reqs(cfg, n=4)
+    fused = ServeEngine(cfg, params, spec=spec, prefill_chunk=8)
+    host = ServeEngine(cfg, params, spec=spec, prefill_chunk=8,
+                       fused_sample=False)
+    assert _toks(fused.serve(reqs)) == _toks(host.serve(reqs))
+
+
+# ------------------- PagePool refcounts + COW accounting -------------------
+def test_pool_share_release_distinct_failures():
+    pool = PagePool(8)
+    own = pool.alloc("a", 3)
+    pool.share("b", own[:2])
+    assert pool.refcount(own[0]) == 2
+    with pytest.raises(ValueError):           # double-hold
+        pool.share("b", [own[0]])
+    with pytest.raises(KeyError, match="ref-drop"):
+        pool.release("b", own[2])             # b never held page 2
+    assert pool.release("b", own[0]) is False  # a still maps it
+    assert pool.release("a", own[0]) is True   # refcount hit zero
+    pool.free("a")
+    with pytest.raises(KeyError, match="double free"):
+        pool.free("a")
+    pool.free("b")
+    assert pool.n_free == 8
+    pool.audit()
+
+
+def test_pool_property_share_interleavings():
+    """Random alloc/share/release/free interleavings keep the audit
+    invariants: every page free exactly-once XOR held by refcount
+    distinct holders."""
+    rng = np.random.default_rng(7)
+    pool = PagePool(12)
+    live = {}                                  # rid -> set(pages)
+    nxt = 0
+    for _ in range(600):
+        op = rng.integers(0, 4)
+        if op == 0 and pool.n_free:
+            n = int(rng.integers(1, pool.n_free + 1))
+            live[nxt] = set(pool.alloc(nxt, n))
+            nxt += 1
+        elif op == 1 and len(live) >= 2:
+            src, dst = rng.choice(list(live), size=2, replace=False)
+            cand = [p for p in live[src] if p not in live[dst]]
+            if cand:
+                take = [int(p) for p in
+                        rng.choice(cand, size=min(2, len(cand)),
+                                   replace=False)]
+                pool.share(dst, take)
+                live[dst].update(take)
+        elif op == 2 and live:
+            rid = int(rng.choice(list(live)))
+            page = int(rng.choice(sorted(live[rid])))
+            pool.release(rid, page)
+            live[rid].discard(page)
+            if not live[rid]:
+                del live[rid]
+        elif op == 3 and live:
+            rid = int(rng.choice(list(live)))
+            pool.free(rid)
+            del live[rid]
+        pool.audit()
+    for rid in list(live):
+        pool.free(rid)
+    pool.audit()
+    assert pool.n_free == 12
+
+
+def test_prefix_registry_match_and_drop():
+    reg = PrefixRegistry(page_len=4)
+    p = tuple(range(10))                       # prompt 0..9
+    reg.register(p[:0], p[0:4], page_id=0)
+    reg.register(p[:4], p[4:8], page_id=1)
+    reg.register(p[:8], p[8:10], page_id=2)    # partial boundary page
+    full, boundary, matched = reg.match(p, len(p) - 1)
+    assert full == [0, 1] and boundary == (2, 1) and matched == 9
+    # the P-1 cap: a full-prompt twin must leave one token to prefill
+    assert matched <= len(p) - 1
+    # divergent continuation of the same prefix coexists and wins when
+    # it matches deeper
+    q = p[:4] + (99, 98, 97, 96)
+    reg.register(q[:4], q[4:8], page_id=3)
+    fq, bq, mq = reg.match(q + (1,), len(q))
+    assert fq == [0, 3] and bq is None and mq == 8
+    # dropping a page forgets exactly its candidates
+    reg.drop_page(1)
+    f2, b2, m2 = reg.match(p, len(p) - 1)
+    assert f2 == [0] and b2 is None and m2 == 4
+    reg.drop_page(0)
+    assert reg.match(p, len(p) - 1) == ([], None, 0)
+
+
+def test_scheduler_cow_reserved_under_tight_pool():
+    """The COW destination is reserved at admission (it IS the slot's own
+    page for the boundary index) — a nearly-exhausted pool defers
+    admission, never fails a COW mid-flight."""
+
+    class Stub:
+        def admit(self, *a, **k):
+            pass
+
+        def prefill(self, *a, **k):
+            pass
+
+        def decode(self, slots):
+            return None
+
+        def evict(self, *a, **k):
+            pass
+
+    reqs = shared_prefix_workload(0, 8, vocab=64, prefix_len=16,
+                                  suffix_len=4, gen=(4, 8), p_dup=0.5,
+                                  arrival_gap=2)
+    # pages_per_slot ample, but the POOL barely fits two requests
+    spec = PageSpec(page_len=8, pages_per_slot=8, n_slots=4)
+    pool = PagePool(10)
+    log = run_serve_loop(reqs, spec, Stub(), prefill_chunk=8,
+                         prefix_share=True, pool=pool)
+    pool.audit()
+    assert pool.n_free == 10                   # everything returned
+    admits = {e[2]: e for e in log if e[0] == "admit"}
+    assert len(admits) == len(reqs)
+    cows = [e for e in log if e[0] == "cow"]
+    assert cows                                # the COW path actually ran
+    for _, _, rid, slot, src, dst in cows:
+        # the admit-time table maps the SHARED boundary page; the COW
+        # destination is the reserve held aside until the swap
+        assert src in admits[rid][4]
+        assert dst not in admits[rid][4]
+        assert src != dst
+
+
+def test_prefix_share_identity_and_skip(gemma):
+    """Shared-prefix serving: same tokens as unshared, >= 50% of prompt
+    prefill skipped, at least one COW duplication, pool audited clean
+    (run_serve_loop audits at exit)."""
+    cfg, params = gemma
+    spec = PageSpec(page_len=8, pages_per_slot=10, n_slots=4)
+    reqs = shared_prefix_workload(1, 6, vocab=cfg.vocab_size,
+                                  prefix_len=24, suffix_len=6,
+                                  gen=(10, 14), p_dup=0.5, arrival_gap=2)
+    plain = ServeEngine(cfg, params, spec=spec, prefill_chunk=8)
+    shared = ServeEngine(cfg, params, spec=spec, prefill_chunk=8,
+                         prefix_share=True)
+    t0, t1 = _toks(plain.serve(reqs)), _toks(shared.serve(reqs))
+    assert t0 == t1
+    assert shared.prefill_skip_frac >= 0.5
+    assert shared.stats["cow_copies"] >= 1
+    assert plain.stats["prefill_skipped_tokens"] == 0
+
+
+def test_spec_and_share_compose(gemma):
+    """Both features on at once: token identity against the plain
+    engine, with speculation dispatching AND pages shared."""
+    cfg, params = gemma
+    spec = PageSpec(page_len=8, pages_per_slot=10, n_slots=4)
+    reqs = shared_prefix_workload(1, 6, vocab=cfg.vocab_size,
+                                  prefix_len=24, suffix_len=6,
+                                  gen=(10, 14), p_dup=0.5, arrival_gap=2)
+    plain = ServeEngine(cfg, params, spec=spec, prefill_chunk=8)
+    both = ServeEngine(cfg, params, spec=spec, prefill_chunk=8,
+                       spec_k=3, prefix_share=True)
+    assert _toks(plain.serve(reqs)) == _toks(both.serve(reqs))
+    assert both.stats["spec_dispatches"] > 0
+    assert both.stats["prefill_skipped_tokens"] > 0
